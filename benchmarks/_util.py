@@ -1,0 +1,42 @@
+"""Benchmark helpers: timing + multi-device subprocess workers.
+
+benchmarks/run.py itself stays on the real device count (1 CPU); benches
+needing a device mesh spawn a subprocess with its own
+--xla_force_host_platform_device_count, so nothing leaks.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_worker(code: str, devices: int = 8, timeout: int = 560) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise RuntimeError(f"bench worker failed:\n{res.stderr[-3000:]}")
+    return res.stdout
+
+
+def time_us(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")

@@ -1,0 +1,85 @@
+"""Kernel harness: Pallas flash-attention / mamba-scan vs XLA reference
+paths.  On this CPU container the kernels run in interpret mode (correctness
+only, not perf); the XLA paths give real wall times and the derived column
+carries the v5e analytic expectation (score traffic removed -> memory-bound
+attention becomes compute-bound; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, smoke_config
+    from repro.kernels.flash_attention import flash_attention as fa
+    from repro.kernels.mamba_scan import mamba_scan as ms
+    from repro.kernels.ref import flash_attention_ref, mamba_scan_ref
+    from repro.models.attention import attend_blocked, attend_naive
+
+    rows = []
+    rng = np.random.default_rng(0)
+    cfg = smoke_config(ARCHS["chatglm3-6b"]).replace(head_dim=128)
+
+    # flash attention: correctness delta + XLA path wall times
+    B, H, K, S, D = 1, 4, 2, 512, 128
+    q = jnp.asarray(rng.standard_normal((B, H, S, D)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, K, S, D)), jnp.float32)
+    t0 = time.perf_counter()
+    out = fa(q, k, v, causal=True, interpret=True)
+    t_interp = (time.perf_counter() - t0) * 1e6
+    ref = flash_attention_ref(q, k, v, causal=True)
+    err = float(jnp.max(jnp.abs(out - ref)))
+    rows.append((f"kernel/flash_attn/B{B}H{H}S{S}D{D}/interpret", t_interp,
+                 f"maxerr={err:.1e}"))
+
+    qm = q.transpose(0, 2, 1, 3)
+    km = k.transpose(0, 2, 1, 3)
+    vm = v.transpose(0, 2, 1, 3)
+    for name, fn in (("naive", lambda: attend_naive(cfg, qm, km, vm,
+                                                    causal=True)),
+                     ("blocked", lambda: attend_blocked(cfg, qm, km, vm,
+                                                        causal=True,
+                                                        kv_chunk=128))):
+        jfn = jax.jit(fn)
+        jax.block_until_ready(jfn())
+        t0 = time.perf_counter()
+        for _ in range(5):
+            out = jfn()
+        jax.block_until_ready(out)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        # v5e derived: score HBM traffic per call for the XLA path
+        score_bytes = 2 * B * H * S * S * 4 * (1 if name == "naive" else 2)
+        rows.append((f"kernel/xla_attn_{name}/B{B}H{H}S{S}D{D}", us,
+                     f"v5e_score_traffic={score_bytes/1e6:.1f}MB"
+                     f"(pallas:0MB, stays in VMEM)"))
+
+    # mamba scan
+    Bm, Sm, Di, N = 1, 512, 128, 16
+    a = jnp.asarray(np.exp(-np.abs(rng.standard_normal((Bm, Sm, Di, N)))),
+                    jnp.float32)
+    bx = jnp.asarray(rng.standard_normal((Bm, Sm, Di, N)) * 0.1, jnp.float32)
+    c = jnp.asarray(rng.standard_normal((Bm, Sm, N)), jnp.float32)
+    t0 = time.perf_counter()
+    y = ms(a, bx, c, chunk=128, di_block=64, interpret=True)
+    t_interp = (time.perf_counter() - t0) * 1e6
+    errm = float(jnp.max(jnp.abs(y - mamba_scan_ref(a, bx, c))))
+    rows.append((f"kernel/mamba_scan/B{Bm}S{Sm}Di{Di}N{N}/interpret",
+                 t_interp, f"maxerr={errm:.1e}"))
+
+    jref = jax.jit(lambda: mamba_scan_ref(a, bx, c))
+    jax.block_until_ready(jref())
+    t0 = time.perf_counter()
+    for _ in range(5):
+        y = jref()
+    jax.block_until_ready(y)
+    us = (time.perf_counter() - t0) / 5 * 1e6
+    h_traffic = Bm * Sm * Di * N * 4 * 2
+    rows.append((f"kernel/xla_mamba_ref/B{Bm}S{Sm}Di{Di}N{N}", us,
+                 f"v5e_h_history_traffic={h_traffic/1e6:.1f}MB"
+                 f"(pallas: h stays in VMEM)"))
+    return rows

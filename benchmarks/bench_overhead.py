@@ -1,0 +1,75 @@
+"""Table III analogue: tracer overhead.
+
+ucTrace interposes at runtime (1.3x-25x slowdown, GB-scale logs).  Our trace
+is compile-time: the overhead is pure offline analysis (HLO parse + assembly)
+on top of an unavoidable lower+compile, with zero runtime cost.  We measure
+lower/compile/parse wall time and trace size for a dense and a MoE step.
+"""
+from __future__ import annotations
+
+import json
+
+from _util import run_worker
+
+WORKER = """
+import json, time
+import jax, jax.numpy as jnp
+from repro.configs import ARCHS, smoke_config
+from repro.core import MeshSpec, trace_from_hlo
+from repro.core.report import to_json
+from repro.distributed import sharding as sh
+from repro.distributed.autoshard import activation_sharding
+from repro.launch.presets import StepSettings
+from repro.launch.steps import make_train_step
+from repro.models import api
+from repro.optim import adamw
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+spec = MeshSpec((2, 4), ("data", "model"))
+rows = []
+for arch in ("chatglm3-6b", "qwen3-moe-235b-a22b"):
+    cfg = smoke_config(ARCHS[arch]).replace(
+        d_model=128, d_ff=256, moe_d_ff=256 if ARCHS[arch].num_experts else 0,
+        num_layers=8, vocab_size=512, num_heads=8, num_kv_heads=4, head_dim=16)
+    st = StepSettings(accum=2, remat="full")
+    step = make_train_step(cfg, adamw.AdamWConfig(), st)
+    params = api.abstract_params(cfg)
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    opt = {"m": jax.tree.map(f32, params), "v": jax.tree.map(f32, params),
+           "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    shape = type("S", (), {"global_batch": 8, "seq_len": 128, "kind": "train"})()
+    batch = api.batch_specs(cfg, shape)
+    pspecs = sh.param_pspecs(cfg, mesh)
+    jfn = jax.jit(step, in_shardings=(
+        sh.named(mesh, pspecs),
+        sh.named(mesh, {"m": pspecs, "v": pspecs,
+                        "count": jax.sharding.PartitionSpec()}), None),
+        donate_argnums=(0, 1))
+    t0 = time.perf_counter()
+    with activation_sharding(mesh):
+        lowered = jfn.lower(params, opt, batch)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+    text = compiled.as_text()
+    tr = trace_from_hlo(text, spec, label=arch,
+                        cost_analysis=compiled.cost_analysis(),
+                        memory_analysis=compiled.memory_analysis())
+    t3 = time.perf_counter()
+    js = to_json(tr)
+    rows.append((f"overhead/{arch}/lower", (t1 - t0) * 1e6, "baseline-cost"))
+    rows.append((f"overhead/{arch}/compile", (t2 - t1) * 1e6, "baseline-cost"))
+    rows.append((f"overhead/{arch}/trace_parse", (t3 - t2) * 1e6,
+                 f"overhead_ratio={(t3-t2)/max(t2-t0,1e-9):.3f}|"
+                 f"hlo_KB={len(text)//1024}|trace_KB={len(js)//1024}|"
+                 f"runtime_overhead=0x (compile-time tool)"))
+print("JSON" + json.dumps(rows))
+"""
+
+
+def run():
+    out = run_worker(WORKER, devices=8)
+    for line in out.splitlines():
+        if line.startswith("JSON"):
+            return [tuple(r) for r in json.loads(line[4:])]
+    raise RuntimeError("no JSON output from worker")

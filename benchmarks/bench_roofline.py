@@ -1,0 +1,60 @@
+"""§Roofline driver: reads the dry-run sweep results JSON (produced by
+`python -m repro.launch.dryrun --arch all --shape all --out results/sweep.json`)
+and emits the per-cell roofline rows.  If no sweep file exists it runs a
+reduced single-cell dry-run in a 512-device subprocess as a liveness check.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from _util import REPO, run_worker
+
+SWEEPS = [os.path.join(REPO, "results", "sweep.json"),
+          os.path.join(REPO, "results", "sweep_multipod.json")]
+
+
+def run():
+    rows = []
+    found = False
+    for sweep in SWEEPS:
+        if not os.path.exists(sweep):
+            continue
+        found = True
+        with open(sweep) as f:
+            cells = json.load(f)
+        seen = {}
+        for c in cells:   # keep last occurrence (re-runs override)
+            seen[(c["arch"], c["shape"])] = c
+        for c in seen.values():
+            if "skipped" in c:
+                rows.append((f"roofline/{c['arch']}/{c['shape']}", -1.0,
+                             f"SKIP:{c['skipped'][:60]}"))
+                continue
+            if "failed" in c:
+                rows.append((f"roofline/{c['arch']}/{c['shape']}", -1.0,
+                             f"FAIL:{c['failed'][:60]}"))
+                continue
+            rows.append((
+                f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+                float(c["compute_ms"]) * 1e3,
+                f"hbm_ms={c['memory_ms']:.1f}|coll_ms={c['collective_ms']:.1f}|"
+                f"dom={c['dominant']}|mfu_bound={c['mfu_bound']:.3f}|"
+                f"useful={c['useful_ratio']:.2f}|mem={c['mem_model_gb']}GB|"
+                f"fits={c['fits_hbm']}"))
+    if found:
+        return rows
+
+    out = run_worker("""
+import json
+from repro.launch.dryrun import lower_cell
+r = lower_cell("hymba-1.5b", "train_4k")
+r.pop("trace", None); r.pop("compiled", None)
+print("JSON" + json.dumps([(f"roofline/{r['arch']}/{r['shape']}",
+    r["compute_ms"] * 1e3,
+    f"dom={r['dominant']}|mfu_bound={r['mfu_bound']:.3f}")]))
+""", devices=512, timeout=560)
+    for line in out.splitlines():
+        if line.startswith("JSON"):
+            rows += [tuple(r) for r in json.loads(line[4:])]
+    return rows

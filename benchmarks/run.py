@@ -1,0 +1,58 @@
+"""Benchmark orchestrator — one bench per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only NAME]
+
+Prints `name,us_per_call,derived` CSV.  Paper mapping:
+    bench_protocols   — Fig 4   (eager vs rendezvous regimes)
+    bench_allreduce   — Fig 5   (Allreduce algorithm comparison)
+    bench_comm_graph  — Fig 6 + Table II (comm graphs, top contenders)
+    bench_misconfig   — Fig 7   (sharding-misconfiguration detection)
+    bench_scale       — Fig 8   (profile vs fleet size)
+    bench_overhead    — Table III (tracer overhead)
+    bench_kernels     — kernels vs oracles (framework hot-spots)
+    bench_roofline    — §Roofline table (reads results/sweep.json)
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from _util import emit  # noqa: E402
+
+BENCHES = [
+    "bench_protocols",
+    "bench_allreduce",
+    "bench_comm_graph",
+    "bench_misconfig",
+    "bench_scale",
+    "bench_overhead",
+    "bench_kernels",
+    "bench_roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    names = [args.only] if args.only else BENCHES
+    print("name,us_per_call,derived")
+    failures = []
+    for name in names:
+        try:
+            mod = __import__(name)
+            rows = mod.run()
+            emit(rows)
+        except Exception as e:  # keep the harness going; report at the end
+            failures.append((name, repr(e)))
+            print(f"{name}/FAILED,-1,{type(e).__name__}")
+    if failures:
+        for name, err in failures:
+            print(f"# FAILURE {name}: {err[:300]}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,97 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Perf hillclimb round 2: combos + accum tradeoffs + serving cell.
+# Driven by round-1 scope breakdowns (see hillclimb.py / EXPERIMENTS.md §Perf).
+
+import dataclasses
+import json
+
+from repro.configs import get_config
+from repro.core.roofline import kernel_adjusted, roofline, train_model_flops, decode_model_flops
+from repro.launch import presets
+from repro.launch.dryrun import lower_cell
+from repro.models import api as model_api
+
+from hillclimb import attn_kernel_bytes, ssm_kernel_bytes, TOKENS  # noqa
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def run_variant(arch, shape, name, cfg_over, set_over, kernel=None,
+                kind="train"):
+    st = presets.settings_for(arch, shape)
+    if set_over:
+        st = dataclasses.replace(st, **set_over)
+    r = lower_cell(arch, shape, settings=st, cfg_overrides=cfg_over or None)
+    tr = r["trace"]
+    n = model_api.flops_param_count(get_config(arch))
+    if kind == "train":
+        model_flops = train_model_flops(n, TOKENS)
+    else:
+        model_flops = decode_model_flops(n, 32 * 32768)
+    rf = roofline(tr, model_flops=model_flops)
+    if kernel:
+        scope_pat, bytes_fn = kernel
+        rf = kernel_adjusted(rf, tr, scope_pat, bytes_fn(arch, st))
+    row = {"cell": f"{arch}/{shape}", "variant": name,
+           "compute_s": rf.compute_s, "memory_s": rf.memory_s,
+           "collective_s": rf.collective_s, "dominant": rf.dominant,
+           "mfu_bound": rf.model_roofline_fraction,
+           "mem_model_gb": r["mem_model_gb"]}
+    print(f"{arch:22s} {name:30s} comp={rf.compute_s:8.2f}s "
+          f"hbm={rf.memory_s:8.2f}s coll={rf.collective_s:8.2f}s "
+          f"dom={rf.dominant:10s} mfu={rf.model_roofline_fraction:.3f} "
+          f"mem={r['mem_model_gb']:.1f}GB")
+    return row
+
+
+def attn_kernel_bytes_prefill(arch, st):
+    """Flash-kernel traffic for the prefill shape (32 x 32768 tokens)."""
+    cfg = get_config(arch)
+    tok_loc = 32 * 32768 // 16
+    q_loc = tok_loc * cfg.q_dim // 16 * 2
+    kv_loc = tok_loc * cfg.kv_dim // 16 * 2
+    return (2 * q_loc + 4 * kv_loc) * cfg.num_layers * 1.0
+
+
+VARIANTS = [
+    # chatglm: stack the round-1 winners
+    ("chatglm3-6b", "train_4k", "H10_spshard+flash",
+     {}, {"seq_shard": True}, (r"/attn", attn_kernel_bytes), "train"),
+    ("chatglm3-6b", "train_4k", "H11_sp+flash+dots",
+     {}, {"seq_shard": True, "remat": "dots"},
+     (r"/attn", attn_kernel_bytes), "train"),
+    # qwen3: halve the FSDP weight-gather traffic by halving accumulation
+    # (prediction: collective term ~ -45%, memory model +~4 GB)
+    ("qwen3-moe-235b-a22b", "train_4k", "H12_accum8+combo",
+     {"moe_group_size": 256, "moe_table_dtype": "bfloat16"},
+     {"accum": 8}, (r"/attn", attn_kernel_bytes), "train"),
+    ("qwen3-moe-235b-a22b", "train_4k", "H12b_accum4+combo",
+     {"moe_group_size": 256, "moe_table_dtype": "bfloat16"},
+     {"accum": 4}, (r"/attn", attn_kernel_bytes), "train"),
+    # falcon: lighter remat on top of the mamba kernel
+    ("falcon-mamba-7b", "train_4k", "H14_kernel+dots",
+     {"ssm_inloop": True}, {"remat": "dots"},
+     (r"/ssm", ssm_kernel_bytes), "train"),
+    # llama3 serving: flash kernel on the prefill cell
+    ("llama3-405b", "prefill_32k", "H15_prefill_flash",
+     {}, {}, (r"/attn", attn_kernel_bytes_prefill), "prefill"),
+]
+
+
+def main():
+    rows = []
+    for arch, shape, name, cfg_over, set_over, kernel, kind in VARIANTS:
+        try:
+            rows.append(run_variant(arch, shape, name, cfg_over, set_over,
+                                    kernel, kind))
+        except Exception as e:
+            print(f"{name}: FAILED {type(e).__name__}: {str(e)[:200]}")
+            rows.append({"variant": name, "failed": str(e)[:300]})
+    with open(os.path.join(HERE, "hillclimb2.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    print("wrote results/hillclimb2.json")
+
+
+if __name__ == "__main__":
+    main()

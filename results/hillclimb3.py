@@ -1,0 +1,21 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 3: chatglm is now collective-bound (FSDP weight-gather x accum);
+# SP sharding freed 4 GB of checkpoint memory -> spend it on fewer
+# microbatches (prediction: collective term ~ accum, memory +saves).
+import json
+from hillclimb2 import run_variant
+from hillclimb import attn_kernel_bytes
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+rows = []
+for name, accum in (("H16_sp+flash+accum2", 2), ("H17_sp+flash+accum1", 1)):
+    rows.append(run_variant("chatglm3-6b", "train_4k", name, {},
+                            {"seq_shard": True, "accum": accum},
+                            (r"/attn", attn_kernel_bytes), "train"))
+# gemma3: second-worst dense mfu; apply the proven combo
+rows.append(run_variant("gemma3-4b", "train_4k", "H18_flash+accum2", {},
+                        {"accum": 2}, (r"/attn", attn_kernel_bytes), "train"))
+with open(os.path.join(HERE, "hillclimb3.json"), "w") as f:
+    json.dump(rows, f, indent=1)
+print("wrote results/hillclimb3.json")

@@ -1,0 +1,18 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 4: with accum=1 + SP saves, is full remat still worth the ~33%
+# recompute? (useful=0.67 -> prediction: remat=dots cuts compute term ~25%
+# at a few GB of extra checkpoints)
+import json
+from hillclimb2 import run_variant
+from hillclimb import attn_kernel_bytes
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+rows = []
+for name, remat in (("H19_sp+flash+acc1+dots", "dots"),
+                    ("H20_sp+flash+acc1+none", "none")):
+    rows.append(run_variant("chatglm3-6b", "train_4k", name, {},
+                            {"seq_shard": True, "accum": 1, "remat": remat},
+                            (r"/attn", attn_kernel_bytes), "train"))
+with open(os.path.join(HERE, "hillclimb4.json"), "w") as f:
+    json.dump(rows, f, indent=1)

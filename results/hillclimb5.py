@@ -1,0 +1,19 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 5: sort-based EP dispatch (beyond-paper) on the MoE cells.
+# Prediction: dispatch/combine einsum FLOPs (O(T*E*C)) collapse to
+# gather/scatter -> compute term down ~15-25%; one-hot table traffic gone.
+import json
+from hillclimb2 import run_variant
+from hillclimb import attn_kernel_bytes
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+rows = []
+rows.append(run_variant("qwen3-moe-235b-a22b", "train_4k", "H21_sortEP",
+                        {"moe_dispatch": "sort"}, {}, None, "train"))
+rows.append(run_variant("qwen3-moe-235b-a22b", "train_4k",
+                        "H22_sortEP+flash+accum4",
+                        {"moe_dispatch": "sort"},
+                        {"accum": 4}, (r"/attn", attn_kernel_bytes), "train"))
+with open(os.path.join(HERE, "hillclimb5.json"), "w") as f:
+    json.dump(rows, f, indent=1)

@@ -1,0 +1,26 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 6: hymba-1.5b train (worst useful ratio 0.14, mfu 0.002).
+# Parallel attn+SSM heads mean BOTH kernels apply; d_model=1600 at 256
+# chips is also just small — measure how far kernels take it.
+import json
+from hillclimb2 import run_variant
+from hillclimb import attn_kernel_bytes, ssm_kernel_bytes, TOKENS
+from repro.configs import get_config
+
+
+def both_kernels(arch, st):
+    return attn_kernel_bytes(arch, st) + ssm_kernel_bytes(arch, st)
+
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+rows = []
+rows.append(run_variant("hymba-1.5b", "train_4k", "baseline", {}, {}, None))
+rows.append(run_variant("hymba-1.5b", "train_4k", "H23_both_kernels",
+                        {"ssm_inloop": True}, {},
+                        (r"/(ssm|attn)", both_kernels), "train"))
+rows.append(run_variant("hymba-1.5b", "train_4k", "H24_kernels+accum1",
+                        {"ssm_inloop": True}, {"accum": 1},
+                        (r"/(ssm|attn)", both_kernels), "train"))
+with open(os.path.join(HERE, "hillclimb6.json"), "w") as f:
+    json.dump(rows, f, indent=1)

@@ -1,0 +1,14 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 8: H29 — at 512 chips the microbatch must divide 32 DP ways;
+# accum 16 -> 8 (prediction: per-device compute finally halves vs
+# single-pod, memory per device drops, mfu recovers past H27).
+import dataclasses, json
+from hillclimb7 import run, rows, st0, HERE
+
+run("H29_mp_fsdp_flash_accum8", True,
+    dataclasses.replace(st0, accum=8), kernel_dp=32)
+run("H29b_mp_hsdp_flash_accum8", True,
+    dataclasses.replace(st0, accum=8, hsdp=True), kernel_dp=32)
+with open(os.path.join(HERE, "hillclimb8.json"), "w") as f:
+    json.dump(rows, f, indent=1)

@@ -1,0 +1,12 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# Round 9: H30 — retest SP residual sharding at the multi-pod accum-8
+# config (it was refuted single-pod at accum 16; the saves term now
+# dominates memory again, and the exchange cost structure differs at dp=32)
+import dataclasses, json
+from hillclimb7 import run, rows, st0, HERE
+
+run("H30_mp_fsdp_flash_acc8_sp", True,
+    dataclasses.replace(st0, accum=8, seq_shard=True), kernel_dp=32)
+with open(os.path.join(HERE, "hillclimb9.json"), "w") as f:
+    json.dump(rows, f, indent=1)

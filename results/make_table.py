@@ -1,0 +1,57 @@
+"""Render the dry-run sweep JSONs into the EXPERIMENTS.md roofline tables."""
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def load(path):
+    with open(os.path.join(HERE, path)) as f:
+        rows = json.load(f)
+    # keep the LAST occurrence per (arch, shape) — reruns override
+    seen = {}
+    for r in rows:
+        seen[(r["arch"], r["shape"])] = r
+    return seen
+
+
+def fmt(rows, title):
+    out = [f"### {title}", "",
+           "| arch | shape | compute_s | memory_s | collective_s | dominant "
+           "| MODEL_GF | useful | mfu_bound | mem GB | fits 16G | coll/step |",
+           "|---|---|---|---|---|---|---|---|---|---|---|---|"]
+    order = ["whisper-tiny", "falcon-mamba-7b", "mixtral-8x22b",
+             "qwen3-moe-235b-a22b", "chatglm3-6b", "llama3-405b",
+             "gemma3-4b", "h2o-danube-3-4b", "hymba-1.5b", "qwen2-vl-2b"]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    for arch in order:
+        for shape in shapes:
+            r = rows.get((arch, shape))
+            if r is None:
+                continue
+            if "skipped" in r:
+                out.append(f"| {arch} | {shape} | — | — | — | SKIP | — | — | "
+                           f"— | — | — | {r['skipped'][:46]} |")
+                continue
+            if "failed" in r:
+                out.append(f"| {arch} | {shape} | FAIL | | | | | | | | | "
+                           f"{r['failed'][:40]} |")
+                continue
+            out.append(
+                f"| {arch} | {shape} | {r['compute_ms']/1e3:.3f} | "
+                f"{r['memory_ms']/1e3:.3f} | {r['collective_ms']/1e3:.3f} | "
+                f"**{r['dominant'][:4]}** | {r['model_gflops']:.0f} | "
+                f"{r['useful_ratio']:.2f} | {r['mfu_bound']:.3f} | "
+                f"{r['mem_model_gb']:.1f} | {'Y' if r['fits_hbm'] else 'N'} | "
+                f"{r['n_collectives']} |")
+    out.append("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    for path, title in (("sweep.json", "Single-pod 16x16 (256 chips)"),
+                        ("sweep_multipod.json",
+                         "Multi-pod 2x16x16 (512 chips)")):
+        if os.path.exists(os.path.join(HERE, path)):
+            print(fmt(load(path), title))

@@ -1,0 +1,13 @@
+"""repro — multi-layer collective tracing for JAX/TPU (ucTrace reproduction)
+plus the production training/serving framework it profiles.
+
+Subpackages:
+    core         the tracer (the paper's contribution)
+    models       dense / MoE / SSM / hybrid / enc-dec / VLM backbones
+    distributed  sharding rules, collective algorithms, EP/PP, constraints
+    data, optim, checkpoint, training   substrates
+    kernels      Pallas TPU kernels (flash attention, mamba scan)
+    configs      the 10 assigned architectures
+    launch       mesh / dryrun / train / serve drivers
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,4 @@
+from repro.checkpoint.store import (AsyncCheckpointer, latest_step, prune_old,
+                                    restore, save)
+
+__all__ = ["save", "restore", "latest_step", "prune_old", "AsyncCheckpointer"]

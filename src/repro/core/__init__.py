@@ -1,0 +1,14 @@
+"""The paper's primary contribution: multi-layer collective tracing for
+JAX/TPU — HLO-parsed "UCT" events, mesh/link attribution, completion cost
+model, scope/semantic ("UCP"/"MPI") attribution, detectors and reports.
+"""
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.topology import Hardware, MeshSpec, V5E
+from repro.core.tracer import trace_compiled, trace_from_hlo, trace_step
+from repro.core.roofline import RooflineReport, roofline
+
+__all__ = [
+    "CollectiveEvent", "Trace", "Hardware", "MeshSpec", "V5E",
+    "trace_compiled", "trace_from_hlo", "trace_step",
+    "RooflineReport", "roofline",
+]

@@ -1,0 +1,109 @@
+"""Analytic completion model — the `completion tracking` analogue.
+
+ucTrace wraps UCT completion callbacks to time each transfer.  Without
+hardware we *model* completion: ring/torus formulas per collective kind,
+with a per-hop latency term and a bandwidth term over the bottleneck link
+class.  The same schema is populated from the XLA xplane profile on a real
+TPU fleet (isolated here so nothing else changes).
+
+The model also classifies each transfer into the paper's eager/rendezvous
+analogue: below `hw.rndv_threshold` the latency term dominates ("eager");
+above it the bandwidth term does ("rndv").
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+from repro.core.events import CollectiveEvent
+from repro.core.topology import (Hardware, MeshSpec, hop_latency, link_class,
+                                 slowest_link_bw, varying_axes)
+
+
+def wire_bytes_per_device(kind: str, operand_bytes: int, group_size: int) -> float:
+    """Ring-algorithm wire bytes each participant sends, per execution."""
+    n = max(group_size, 1)
+    if n == 1:
+        return 0.0
+    per_shard = operand_bytes / n
+    if kind == "all-reduce":
+        # reduce-scatter + all-gather: 2 (n-1)/n x payload
+        return 2.0 * (n - 1) * per_shard
+    if kind in ("all-gather", "reduce-scatter"):
+        return (n - 1) * per_shard
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        # each device keeps 1/n of its per-device operand, sends the rest
+        return operand_bytes * (n - 1) / n
+    if kind == "collective-broadcast":
+        return operand_bytes
+    if kind == "collective-permute":
+        return operand_bytes
+    return operand_bytes
+
+
+def _latency_hops(kind: str, group_size: int) -> int:
+    n = max(group_size, 1)
+    if n == 1:
+        return 0
+    if kind in ("all-reduce",):
+        return 2 * (n - 1)          # ring RS+AG phases
+    if kind in ("all-gather", "reduce-scatter"):
+        return n - 1
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return n - 1
+    return 1                        # permute / broadcast
+
+
+def estimate_time_s(ev: CollectiveEvent, mesh: MeshSpec, hw: Hardware) -> float:
+    """Modeled completion time of one execution of the collective."""
+    bw = slowest_link_bw(mesh, ev.axes, hw)
+    lat = hop_latency(mesh, ev.axes, hw)
+    # bidirectional ring: two directions usable for bandwidth collectives
+    eff_bw = 2.0 * bw
+    t_bw = ev.wire_bytes_per_device / eff_bw if eff_bw else 0.0
+    t_lat = _latency_hops(ev.kind, ev.group_size) * lat
+    return t_lat + t_bw
+
+
+def protocol_regime(ev: CollectiveEvent, hw: Hardware) -> str:
+    """eager/rendezvous analogue: latency- vs bandwidth-dominated."""
+    per_shard = ev.operand_bytes / max(ev.group_size, 1)
+    return "eager" if per_shard < hw.rndv_threshold else "rndv"
+
+
+def annotate_event(ev: CollectiveEvent, mesh: MeshSpec, hw: Hardware) -> None:
+    """Fill topology + completion fields in place."""
+    groups = ev.replica_groups
+    rep = groups[0] if groups else []
+    ev.axes = varying_axes(mesh, rep)
+    if ev.source_target_pairs:
+        # permutes: classify from an example pair
+        s, t = ev.source_target_pairs[0]
+        ev.axes = varying_axes(mesh, [s, t])
+    ev.link_class = link_class(mesh, ev.axes)
+    ev.wire_bytes_per_device = wire_bytes_per_device(
+        ev.kind, ev.operand_bytes, ev.group_size)
+    ev.protocol = protocol_regime(ev, hw)
+    ev.est_time_s = estimate_time_s(ev, mesh, hw)
+
+
+# --------------------------------------------------------------------------
+# explicit algorithm models (Fig 5 analogue: ring / RSAG / recursive doubling)
+# --------------------------------------------------------------------------
+
+def allreduce_time(algorithm: str, payload_bytes: int, group_size: int,
+                   link_bw: float, lat: float) -> float:
+    """Closed-form Allreduce cost for the three classic algorithms."""
+    n = max(group_size, 2)
+    b = payload_bytes
+    bw = 2.0 * link_bw
+    if algorithm == "ring":
+        return 2 * (n - 1) * lat + 2 * (n - 1) / n * b / bw
+    if algorithm == "reduce_scatter_allgather":
+        # same traffic as ring but log-structured latency on a torus
+        steps = 2 * math.ceil(math.log2(n))
+        return steps * lat + 2 * (n - 1) / n * b / bw
+    if algorithm == "recursive_doubling":
+        steps = math.ceil(math.log2(n))
+        return steps * lat + steps * b / bw
+    raise ValueError(algorithm)

@@ -1,0 +1,138 @@
+"""Performance-bug detectors — the paper's Fig 7 (NUMA misbinding) analogue.
+
+On an IB/GPU cluster the classic silent misconfiguration is traffic taking a
+host detour because of process placement.  On a TPU mesh the analogue is
+traffic taking an *axis* detour because of bad PartitionSpecs.  Each detector
+inspects the assembled trace and returns human-actionable findings.
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.core.events import Trace
+from repro.core.topology import Hardware, V5E
+
+
+@dataclass
+class Finding:
+    detector: str
+    severity: str          # info | warn | critical
+    message: str
+    wasted_bytes: float = 0.0
+
+    def __str__(self):
+        return f"[{self.severity}] {self.detector}: {self.message}"
+
+
+def detect_redundant_gathers(trace: Trace) -> List[Finding]:
+    """Same tensor gathered more than once per execution context.
+
+    (ucTrace: repeated identical UCT transfers within one MPI call.)
+    """
+    seen: Dict[tuple, int] = defaultdict(int)
+    bytes_by_key: Dict[tuple, float] = defaultdict(float)
+    for e in trace.events:
+        if e.kind not in ("all-gather", "all-reduce"):
+            continue
+        key = (e.kind, e.operand_bytes, e.link_class, e.scope, e.computation)
+        seen[key] += 1
+        bytes_by_key[key] = e.operand_bytes * e.multiplicity
+    out = []
+    for key, count in seen.items():
+        if count > 1 and key[1] > (1 << 20):
+            kind, nbytes, link, scope, comp = key
+            wasted = (count - 1) * bytes_by_key[key]
+            out.append(Finding(
+                "redundant_collective", "warn",
+                f"{count}x identical {kind} of {nbytes/1e6:.1f} MB on {link} "
+                f"(scope '{scope or '-'}', comp '{comp}') — candidates for CSE "
+                f"or re-materialization of the gathered value",
+                wasted_bytes=wasted))
+    return out
+
+
+def detect_axis_detours(trace: Trace, expected: Dict[str, str],
+                        min_bytes: int = 1 << 20) -> List[Finding]:
+    """Collectives spanning mesh axes their semantic class should not touch.
+
+    `expected` maps semantic class -> axis name it should stay on
+    (e.g. {"grad_sync": "data", "moe_dispatch": "model"}).  A grad-sync that
+    crosses `model`, or TP traffic crossing `pod`, is the sharding analogue
+    of NUMA-misbound traffic routed through remote NICs.  Sub-MB payloads
+    (scalar metric reductions, grad-norm psums) are exempt.
+    """
+    out = []
+    for e in trace.events:
+        want = expected.get(e.semantic)
+        if want is None or not e.axes:
+            continue
+        if e.operand_bytes * e.multiplicity < min_bytes:
+            continue
+        extra = [a for a in e.axes if a != want]
+        if extra:
+            out.append(Finding(
+                "axis_detour", "warn",
+                f"{e.semantic} {e.kind} ({e.operand_bytes/1e6:.1f} MB) spans "
+                f"axes {e.axes}, expected only '{want}' — check the "
+                f"PartitionSpec feeding scope '{e.scope or '-'}'",
+                wasted_bytes=e.operand_bytes * e.multiplicity))
+    return out
+
+
+def detect_eager_floods(trace: Trace, hw: Hardware = V5E,
+                        min_count: int = 64) -> List[Finding]:
+    """Many tiny latency-bound transfers (the eager-protocol flood).
+
+    (ucTrace Fig 4/6: am_short floods where rendezvous would batch.)
+    """
+    eager = [e for e in trace.events if e.protocol == "eager"]
+    n = sum(e.multiplicity for e in eager)
+    if n >= min_count:
+        lat = sum(e.est_time_s * e.multiplicity for e in eager)
+        return [Finding(
+            "eager_flood", "info",
+            f"{n} latency-bound collectives/step (< {hw.rndv_threshold/1024:.0f} KiB "
+            f"payload/shard), ~{lat*1e6:.0f} us serialized latency — consider "
+            f"fusing/batching small collectives or increasing scan body size")]
+    return []
+
+
+def detect_layout_thrash(trace: Trace, threshold_bytes: float = 1 << 30) -> List[Finding]:
+    """Heavy transpose/copy traffic around sharded ops (layout mismatch)."""
+    tb = trace.op_stats.transpose_bytes
+    if tb > threshold_bytes:
+        return [Finding(
+            "layout_thrash", "info",
+            f"{tb/1e9:.2f} GB of transpose/copy traffic "
+            f"({trace.op_stats.n_transpose} ops) — review operand layouts or "
+            f"einsum dimension orders adjacent to collectives")]
+    return []
+
+
+def detect_cross_pod_bulk(trace: Trace) -> List[Finding]:
+    """Bulk traffic on the slow inter-pod DCI that could stay intra-pod."""
+    out = []
+    dci = [e for e in trace.events if e.link_class.startswith(("dci", "xpod"))]
+    total = sum(e.total_wire_bytes * e.multiplicity for e in dci)
+    if total > 1 << 30:
+        out.append(Finding(
+            "cross_pod_bulk", "warn",
+            f"{total/1e9:.2f} GB/step crosses the inter-pod DCI "
+            f"({len(dci)} collectives) — hierarchical reduction "
+            f"(in-pod reduce-scatter, cross-pod exchange of 1/pod_size) or "
+            f"gradient compression recommended"))
+    return out
+
+
+def run_all(trace: Trace, expected_axes: Dict[str, str] | None = None,
+            hw: Hardware = V5E) -> List[Finding]:
+    findings = []
+    findings += detect_redundant_gathers(trace)
+    if expected_axes:
+        findings += detect_axis_detours(trace, expected_axes)
+    findings += detect_eager_floods(trace, hw)
+    findings += detect_layout_thrash(trace)
+    findings += detect_cross_pod_bulk(trace)
+    return findings

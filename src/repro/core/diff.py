@@ -1,0 +1,82 @@
+"""Trace diffing — the before/after workflow of the paper's case studies.
+
+ucTrace's users compare runs (eager vs rndv configs, NUMA-aware vs not,
+OMPI vs MPICH).  `diff_traces` aligns two traces by (kind, link class,
+semantic) and reports byte/count/time deltas, new/vanished traffic classes,
+and a verdict line per class — so "what did my change do to communication?"
+is one function call on two compiled artifacts.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+from repro.core.events import Trace
+
+
+@dataclass
+class DiffRow:
+    key: str
+    bytes_a: float
+    bytes_b: float
+    count_a: float
+    count_b: float
+    time_a: float
+    time_b: float
+
+    @property
+    def bytes_ratio(self) -> float:
+        if self.bytes_a == 0:
+            return float("inf") if self.bytes_b else 1.0
+        return self.bytes_b / self.bytes_a
+
+    def verdict(self, threshold: float = 0.1) -> str:
+        r = self.bytes_ratio
+        if self.bytes_a == 0 and self.bytes_b > 0:
+            return "NEW"
+        if self.bytes_b == 0 and self.bytes_a > 0:
+            return "GONE"
+        if r > 1 + threshold:
+            return f"GREW {r:.2f}x"
+        if r < 1 - threshold:
+            return f"SHRANK {1/r:.2f}x"
+        return "~same"
+
+
+def _agg(trace: Trace, by: str) -> Dict[str, Dict[str, float]]:
+    if by == "kind_link":
+        return trace.by_kind_and_link()
+    if by == "semantic":
+        return trace.by_semantic()
+    return trace.by(lambda e: f"{e.semantic}|{e.kind}|{e.link_class}")
+
+
+def diff_traces(a: Trace, b: Trace, by: str = "kind_link") -> List[DiffRow]:
+    agg_a = _agg(a, by)
+    agg_b = _agg(b, by)
+    rows = []
+    for key in sorted(set(agg_a) | set(agg_b)):
+        ra = agg_a.get(key, {"bytes": 0, "count": 0, "time_s": 0})
+        rb = agg_b.get(key, {"bytes": 0, "count": 0, "time_s": 0})
+        rows.append(DiffRow(key, ra["bytes"], rb["bytes"], ra["count"],
+                            rb["count"], ra["time_s"], rb["time_s"]))
+    rows.sort(key=lambda r: -(abs(r.bytes_b - r.bytes_a)))
+    return rows
+
+
+def render_diff(a: Trace, b: Trace, by: str = "kind_link") -> str:
+    rows = diff_traces(a, b, by)
+    lines = [f"trace diff: '{a.label}' -> '{b.label}'  (by {by})",
+             f"{'key':42s} {'GB a':>9s} {'GB b':>9s} {'cnt a':>7s} "
+             f"{'cnt b':>7s} {'ms a':>8s} {'ms b':>8s}  verdict"]
+    for r in rows:
+        lines.append(
+            f"{r.key:42s} {r.bytes_a/1e9:9.3f} {r.bytes_b/1e9:9.3f} "
+            f"{int(r.count_a):7d} {int(r.count_b):7d} "
+            f"{r.time_a*1e3:8.2f} {r.time_b*1e3:8.2f}  {r.verdict()}")
+    ta, tb = a.total_est_time_s(), b.total_est_time_s()
+    lines.append(f"{'TOTAL modeled collective time':42s} "
+                 f"{'':9s} {'':9s} {'':7s} {'':7s} "
+                 f"{ta*1e3:8.2f} {tb*1e3:8.2f}  "
+                 f"{'%.2fx' % (tb/ta) if ta else 'n/a'}")
+    return "\n".join(lines)

@@ -1,0 +1,132 @@
+"""Event model for the multi-layer trace (the ucTrace data model, TPU-ified).
+
+Layer mapping (see DESIGN.md §2):
+  MPI  function   -> `semantic`   (grad_sync / attention / moe_dispatch / ...)
+  UCP  operation  -> `jax_prim`   (the jax-level primitive from op_name)
+  UCT  send       -> `CollectiveEvent` (one compiled HLO collective op)
+  UCT  transport  -> `link_class` (ici.<axis> / dci.pod / mixed / local)
+  completion time -> `est_time_s` (cost model; xplane-fed on real hardware)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class CollectiveEvent:
+    """One HLO collective op instance (the UCT-layer record)."""
+
+    name: str                      # HLO op name (%all-reduce.1)
+    kind: str                      # all-reduce | all-gather | reduce-scatter |
+                                   # all-to-all | collective-permute
+    async_start: bool              # -start form (overlappable)
+    operand_bytes: int             # sum of operand payload bytes
+    result_bytes: int
+    dtype: str
+    replica_groups: List[List[int]]    # resolved device ids per group
+    group_size: int
+    num_groups: int
+    op_name: str                   # HLO metadata op_name (call-stack analogue)
+    computation: str               # enclosing HLO computation
+    multiplicity: int = 1          # executions per step (while-loop trip counts)
+    channel_id: Optional[int] = None
+    source_target_pairs: Optional[List[Tuple[int, int]]] = None  # permutes
+
+    # derived (filled by attribution/topology/cost model)
+    link_class: str = ""           # ici.data | ici.model | dci.pod | mixed(..) | local
+    axes: Tuple[str, ...] = ()     # mesh axes the groups span
+    semantic: str = ""             # MPI-function analogue
+    jax_prim: str = ""             # UCP-operation analogue
+    scope: str = ""                # named_scope path prefix
+    protocol: str = ""             # eager | rndv  (latency- vs bandwidth-bound)
+    wire_bytes_per_device: float = 0.0
+    est_time_s: float = 0.0
+
+    @property
+    def total_wire_bytes(self) -> float:
+        """Wire traffic summed over participating devices, per execution."""
+        return self.wire_bytes_per_device * self.group_size * self.num_groups
+
+
+@dataclass
+class HloOpStats:
+    """Non-collective per-program stats used by detectors/roofline."""
+
+    n_transpose: int = 0
+    n_fusion: int = 0
+    n_convert: int = 0
+    n_reshape: int = 0
+    transpose_bytes: int = 0
+    # loop-aware totals (x while trip counts) — cost_analysis counts loop
+    # bodies once, so these are the authoritative roofline inputs.
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    # per-named_scope attribution (module-level rollups + kernel-adjusted
+    # rooflines: e.g. subtract `attn` score traffic when the Pallas flash
+    # kernel replaces the XLA blocked path)
+    bytes_by_scope: Dict[str, float] = field(default_factory=dict)
+    flops_by_scope: Dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class Trace:
+    """A complete multi-layer communication trace of one compiled step."""
+
+    label: str
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    num_devices: int
+    events: List[CollectiveEvent] = field(default_factory=list)
+    op_stats: HloOpStats = field(default_factory=HloOpStats)
+
+    # compiled-artifact numbers (cost_analysis / memory_analysis)
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    per_device_memory_bytes: float = 0.0
+    argument_bytes: float = 0.0
+    output_bytes: float = 0.0
+
+    # ---- aggregate views ---------------------------------------------------
+    def total_collective_bytes(self) -> float:
+        """Sum of operand sizes x multiplicity (roofline definition)."""
+        return float(sum(e.operand_bytes * e.multiplicity for e in self.events))
+
+    def total_wire_bytes(self) -> float:
+        return float(sum(e.total_wire_bytes * e.multiplicity for e in self.events))
+
+    def total_est_time_s(self) -> float:
+        return float(sum(e.est_time_s * e.multiplicity for e in self.events))
+
+    def overlapped_est_time_s(self) -> float:
+        """Lower bound on collective time with perfect cross-link overlap.
+
+        Different link classes (ici.data vs ici.model vs dci.pod) use
+        disjoint physical links, so a latency-hiding scheduler can run them
+        concurrently: the bound is the max per-class serialized time, not
+        the sum.  Together with total_est_time_s() this brackets reality.
+        """
+        per_class: Dict[str, float] = {}
+        for e in self.events:
+            per_class[e.link_class] = per_class.get(e.link_class, 0.0) \
+                + e.est_time_s * e.multiplicity
+        return max(per_class.values()) if per_class else 0.0
+
+    def by(self, key_fn) -> Dict[str, Dict[str, float]]:
+        """Aggregate {key: {bytes, wire_bytes, count, time_s}}."""
+        agg: Dict[str, Dict[str, float]] = {}
+        for e in self.events:
+            k = key_fn(e)
+            a = agg.setdefault(k, {"bytes": 0.0, "wire_bytes": 0.0,
+                                   "count": 0.0, "time_s": 0.0})
+            a["bytes"] += e.operand_bytes * e.multiplicity
+            a["wire_bytes"] += e.total_wire_bytes * e.multiplicity
+            a["count"] += e.multiplicity
+            a["time_s"] += e.est_time_s * e.multiplicity
+        return agg
+
+    def by_kind_and_link(self):
+        return self.by(lambda e: f"{e.kind}|{e.link_class}")
+
+    def by_semantic(self):
+        return self.by(lambda e: e.semantic or "other")

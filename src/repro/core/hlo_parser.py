@@ -1,0 +1,390 @@
+"""HLO text parser: extract collective ops, shapes, replica groups, metadata.
+
+This is the UCT-interception analogue.  UCX chooses transports at runtime so
+ucTrace hooks the send functions; XLA chooses collectives at compile time so
+we read them out of ``compiled.as_text()`` — an *exact* record of every
+transfer the step will execute, including:
+
+  * sync and async (`-start`/`-done`) collective forms,
+  * iota (`[G,S]<=[dims]T(perm)`) and explicit (`{{0,1},..}`) replica groups,
+  * per-op `metadata={op_name="..."}` — the compiled-in call-stack analogue,
+  * while-loop trip counts, so collectives inside `lax.scan` bodies are
+    counted `trip_count` times (log-processing analogue of matching
+    repeated sends).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.events import CollectiveEvent, HloOpStats
+from repro.core.topology import resolve_iota_groups
+
+DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "f8e4m3": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_OPLINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"([a-z][a-z0-9\-]*)\((.*)$")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+_CHANNEL_RE = re.compile(r"channel_id=(\d+)")
+_IOTA_RG_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
+_EXPLICIT_RG_RE = re.compile(r"replica_groups=\{(\{[^}]*\}(?:,\{[^}]*\})*)?\}")
+_STP_RE = re.compile(r"source_target_pairs=\{(\{[^}]*\}(?:,\{[^}]*\})*)?\}")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*\))?\s*->.*\{\s*$")
+_WHILE_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_CONST_INT_RE = re.compile(r"constant\((\d+)\)")
+
+
+def parse_type_bytes(type_str: str) -> Tuple[int, str]:
+    """Total bytes + primary dtype of a (possibly tuple) HLO type string."""
+    total = 0
+    dtype = ""
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in DTYPE_BYTES:
+            continue
+        count = 1
+        if dims:
+            for d in dims.split(","):
+                count *= int(d)
+        total += count * DTYPE_BYTES[dt]
+        if not dtype:
+            dtype = dt
+    return total, dtype
+
+
+@dataclass
+class _Computation:
+    name: str
+    lines: List[str] = field(default_factory=list)
+
+
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _line_scope(line: str) -> str:
+    """Deepest named_scope component of the op's metadata (module label)."""
+    md = _METADATA_RE.search(line)
+    if not md:
+        return ""
+    from repro.core.attribution import split_op_name
+    scope, _prim = split_op_name(md.group(1))
+    return scope
+
+
+def _dot_flops(line: str, type_str: str, shapes: Dict[str, str]) -> float:
+    """FLOPs of one dot: 2 x prod(result dims) x prod(lhs contracting dims)."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0.0
+    out_elems = 1
+    if m.group(2):
+        for d in m.group(2).split(","):
+            out_elems *= int(d)
+    cm = _DOT_DIMS_RE.search(line)
+    contract = 1
+    if cm is not None:
+        # lhs operand shape
+        rest = line.split("dot(", 1)[1]
+        ops = _OPERANDS_RE.findall(rest.split(")")[0])
+        if ops:
+            lhs_type = shapes.get(ops[0], "")
+            sm = _SHAPE_RE.search(lhs_type)
+            if sm and sm.group(2):
+                dims = [int(x) for x in sm.group(2).split(",")]
+                idxs = [int(x) for x in cm.group(1).split(",")] if cm.group(1) else []
+                for i in idxs:
+                    if i < len(dims):
+                        contract *= dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _split_computations(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    current: Optional[_Computation] = None
+    entry_name = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        # computation headers: `[ENTRY] %name (params...) -> type {`
+        if stripped.endswith("{") and "->" in stripped and "=" not in \
+                stripped.split("(")[0]:
+            head = stripped
+            is_entry = head.startswith("ENTRY")
+            if is_entry:
+                head = head[len("ENTRY"):].lstrip()
+            name = head.split("(")[0].strip().lstrip("%").strip()
+            if name:
+                current = _Computation(name)
+                comps[name] = current
+                if is_entry:
+                    entry_name = name
+                continue
+        if current is not None:
+            current.lines.append(line)
+    if entry_name:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond_comp: _Computation) -> int:
+    """Heuristic while-loop trip count: largest int constant in condition."""
+    best = 1
+    for line in cond_comp.lines:
+        for m in _CONST_INT_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def _multiplicities(comps: Dict[str, _Computation]) -> Dict[str, int]:
+    """Execution multiplicity per computation (while bodies x trip count)."""
+    entry = comps.get("__entry__")
+    mult: Dict[str, int] = {}
+    if entry is None:
+        return {name: 1 for name in comps}
+    mult[entry.name] = 1
+
+    # propagate through call sites breadth-first
+    changed = True
+    passes = 0
+    while changed and passes < 50:
+        changed = False
+        passes += 1
+        for name, comp in comps.items():
+            if name == "__entry__" or name not in mult:
+                continue
+            base = mult[name]
+            for line in comp.lines:
+                callees: List[Tuple[str, int]] = []
+                wm = _WHILE_RE.search(line)
+                cm = _COND_RE.search(line)
+                if wm and cm and "while(" in line:
+                    cond = comps.get(cm.group(1))
+                    tc = _trip_count(cond) if cond else 1
+                    callees.append((wm.group(1), tc))
+                    callees.append((cm.group(1), tc))
+                else:
+                    for rx in (_CALLS_RE, _TO_APPLY_RE):
+                        m = rx.search(line)
+                        if m:
+                            callees.append((m.group(1), 1))
+                for callee, k in callees:
+                    new = base * k
+                    if callee in comps and mult.get(callee, 0) < new:
+                        mult[callee] = new
+                        changed = True
+    return mult
+
+
+def _parse_replica_groups(line: str, num_devices: int) -> List[List[int]]:
+    m = _IOTA_RG_RE.search(line)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(x) for x in m.group(3).split(",")]
+        perm = [int(x) for x in m.group(4).split(",")] if m.group(4) else None
+        return resolve_iota_groups(g, s, dims, perm)
+    m = _EXPLICIT_RG_RE.search(line)
+    if m:
+        body = m.group(1)
+        if not body:
+            return [list(range(num_devices))]
+        groups = []
+        for grp in re.findall(r"\{([^}]*)\}", body):
+            if grp.strip():
+                groups.append([int(x) for x in grp.split(",")])
+        return groups or [list(range(num_devices))]
+    return [list(range(num_devices))]
+
+
+def _parse_stp(line: str) -> Optional[List[Tuple[int, int]]]:
+    m = _STP_RE.search(line)
+    if not m or not m.group(1):
+        return None
+    pairs = []
+    for grp in re.findall(r"\{([^}]*)\}", m.group(1)):
+        a, b = grp.split(",")
+        pairs.append((int(a), int(b)))
+    return pairs
+
+
+def parse_hlo(text: str, num_devices: int) -> Tuple[List[CollectiveEvent], HloOpStats]:
+    """Extract collective events (+program stats) from compiled HLO text.
+
+    Also accumulates *loop-aware* FLOP and traffic totals (stats.flops /
+    stats.bytes_accessed): `compiled.cost_analysis()` counts while-loop
+    bodies ONCE, so for a scan-over-layers program it under-reports compute
+    by ~num_layers x.  We re-derive both, multiplying by trip counts.
+    """
+    comps = _split_computations(text)
+    mult = _multiplicities(comps)
+    events: List[CollectiveEvent] = []
+    stats = HloOpStats()
+
+    # symbol tables (per computation) for operand-shape lookups, and the set
+    # of fusion-body computations (excluded from byte accounting: their
+    # traffic is the fusion op's operands/results at the call site).
+    shapes_by_comp: Dict[str, Dict[str, str]] = {}
+    kinds_by_comp: Dict[str, Dict[str, str]] = {}
+    fusion_bodies: set = set()
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        table: Dict[str, str] = {}
+        kinds: Dict[str, str] = {}
+        for line in comp.lines:
+            line = _COMMENT_RE.sub("", line)
+            lm = _OPLINE_RE.match(line)
+            if lm:
+                table[lm.group(1)] = lm.group(2)
+                kinds[lm.group(1)] = lm.group(3)
+                if lm.group(3) == "fusion":
+                    fm = _CALLS_RE.search(line)
+                    if fm:
+                        fusion_bodies.add(fm.group(1))
+        shapes_by_comp[name] = table
+        kinds_by_comp[name] = kinds
+
+    _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+                   "bitcast", "after-all", "partition-id", "replica-id",
+                   "iota", "reshape"}
+    # elementwise/cheap ops: on TPU these fuse into producers/consumers, so
+    # counting their operands would massively over-state HBM traffic (the
+    # CPU host backend fuses far less aggressively than the TPU pipeline).
+    _FUSED_ON_TPU = {
+        "add", "subtract", "multiply", "divide", "negate", "abs", "exponential",
+        "exponential-minus-one", "log", "log-plus-one", "rsqrt", "sqrt", "tanh",
+        "logistic", "sign", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+        "round-nearest-even", "maximum", "minimum", "compare", "select", "and",
+        "or", "not", "xor", "clamp", "convert", "broadcast", "power", "is-finite",
+        "shift-left", "shift-right-logical", "shift-right-arithmetic", "atan2",
+        "remainder", "map", "reverse", "real", "imag", "erf", "expm1", "log1p",
+        "popcnt", "clz", "slice", "pad", "concatenate", "copy", "transpose",
+        "reduce", "broadcast-in-dim", "stochastic-convert", "cbrt",
+    }
+
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1)
+        shapes = shapes_by_comp.get(name, {})
+        kinds = kinds_by_comp.get(name, {})
+        in_fusion_body = name in fusion_bodies
+        for line in comp.lines:
+            line = _COMMENT_RE.sub("", line)
+            lm = _OPLINE_RE.match(line)
+            if not lm:
+                continue
+            op_result, type_str, op_kind, rest = lm.groups()
+
+            if op_kind == "dot":
+                fl = _dot_flops(line, type_str, shapes) * m
+                stats.flops += fl
+                sc = _line_scope(line)
+                stats.flops_by_scope[sc] = stats.flops_by_scope.get(sc, 0.0) + fl
+
+            # HBM-traffic estimate: each materialized tensor is written once
+            # (result bytes) and read about once downstream; parameter
+            # (weight) operands are charged at the consuming op.  Counting
+            # operand bytes of every op would double-count each fusion
+            # boundary and inflate traffic ~10x at CPU-fusion granularity.
+            if (not in_fusion_body and op_kind not in _NO_TRAFFIC
+                    and op_kind not in _FUSED_ON_TPU):
+                rb, _ = parse_type_bytes(type_str)
+                pb = 0
+                for op_ref in _OPERANDS_RE.findall(rest.split(")")[0]):
+                    if kinds.get(op_ref) == "parameter":
+                        b, _d = parse_type_bytes(shapes.get(op_ref, ""))
+                        pb += b
+                tb = (2 * rb + pb) * m
+                stats.bytes_accessed += tb
+                sc = _line_scope(line)
+                stats.bytes_by_scope[sc] = stats.bytes_by_scope.get(sc, 0.0) + tb
+
+            if op_kind in ("transpose", "copy") or op_kind.startswith("transpose"):
+                stats.n_transpose += 1
+                b, _ = parse_type_bytes(type_str)
+                stats.transpose_bytes += b * m
+                continue
+            if op_kind == "fusion":
+                stats.n_fusion += 1
+                continue
+            if op_kind == "convert":
+                stats.n_convert += 1
+                continue
+            if op_kind in ("reshape", "bitcast"):
+                stats.n_reshape += 1
+                continue
+
+            base = op_kind[:-6] if op_kind.endswith("-start") else op_kind
+            if base not in COLLECTIVE_KINDS:
+                continue
+            if op_kind.endswith("-done"):
+                continue
+
+            result_bytes, dtype = parse_type_bytes(type_str)
+            # operand bytes: for -start forms the result is a (operand, result)
+            # tuple; approximate operand size from the paren list shapes if
+            # present, else from result type arithmetic.
+            operand_bytes = _operand_bytes(rest, type_str, base, line)
+            groups = _parse_replica_groups(line, num_devices)
+            stp = _parse_stp(line) if base == "collective-permute" else None
+            md = _METADATA_RE.search(line)
+            ch = _CHANNEL_RE.search(line)
+            gsz = max(len(g) for g in groups) if groups else 1
+            events.append(CollectiveEvent(
+                name=op_result,
+                kind=base,
+                async_start=op_kind.endswith("-start"),
+                operand_bytes=operand_bytes,
+                result_bytes=result_bytes,
+                dtype=dtype,
+                replica_groups=groups,
+                group_size=gsz,
+                num_groups=len(groups),
+                op_name=md.group(1) if md else "",
+                computation=name,
+                multiplicity=m,
+                channel_id=int(ch.group(1)) if ch else None,
+                source_target_pairs=stp,
+            ))
+    return events, stats
+
+
+def _operand_bytes(rest: str, type_str: str, kind: str, line: str) -> int:
+    """Payload (input) bytes of the collective."""
+    result_bytes, _ = parse_type_bytes(type_str)
+    if kind == "all-gather":
+        # result = group_size x operand; report the *result* (gathered) size
+        # as payload — matches the roofline "operand sizes" convention of
+        # counting the logically-moved tensor once.
+        return result_bytes
+    if kind == "reduce-scatter":
+        # operand = group_size x result; payload is the pre-scatter operand.
+        m = _IOTA_RG_RE.search(line)
+        if m:
+            return result_bytes * int(m.group(2))
+        return result_bytes
+    # all-reduce / all-to-all / permute: operand size == result size
+    # (-start tuples double-count operand+result; halve them)
+    if type_str.strip().startswith("(") and kind == "all-reduce":
+        return result_bytes // 2
+    return result_bytes

@@ -1,0 +1,157 @@
+"""Renderers: ASCII / JSON / self-contained HTML (the Fig 3 visualizer).
+
+Views (paper analogues):
+  * top-contenders table   — Table II: bytes% (count%) per kind x link class
+  * communication matrix   — Fig 3b heatmap over mesh coordinates
+  * device view            — Fig 3d: per-link-class traffic graph
+  * timeline               — Fig 3a: modeled serialized collective schedule
+  * semantic breakdown     — the MPI-function layer rollup
+"""
+from __future__ import annotations
+
+import html as html_mod
+import json
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.events import Trace
+from repro.core.topology import MeshSpec, comm_matrix, reduce_matrix
+
+
+# --------------------------------------------------------------------------
+# ASCII
+# --------------------------------------------------------------------------
+
+def top_contenders_table(trace: Trace, by: str = "kind_link") -> str:
+    """Bytes% (count%) per (collective kind x link class) — Table II analogue."""
+    agg = trace.by_kind_and_link() if by == "kind_link" else trace.by_semantic()
+    tot_b = sum(a["bytes"] for a in agg.values()) or 1.0
+    tot_c = sum(a["count"] for a in agg.values()) or 1.0
+    rows = sorted(agg.items(), key=lambda kv: -kv[1]["bytes"])
+    lines = [f"{'key':44s} {'bytes%':>8s} {'count%':>8s} {'GB':>10s} "
+             f"{'count':>8s} {'est_ms':>8s}"]
+    for k, a in rows:
+        lines.append(
+            f"{k:44s} {100*a['bytes']/tot_b:7.1f}% {100*a['count']/tot_c:7.1f}% "
+            f"{a['bytes']/1e9:10.3f} {int(a['count']):8d} {a['time_s']*1e3:8.3f}")
+    lines.append(f"{'total':44s} {'100.0%':>8s} {'100.0%':>8s} "
+                 f"{tot_b/1e9:10.3f} {int(tot_c):8d} "
+                 f"{trace.total_est_time_s()*1e3:8.3f}")
+    return "\n".join(lines)
+
+
+def semantic_table(trace: Trace) -> str:
+    return top_contenders_table(trace, by="semantic")
+
+
+def ascii_matrix(mat: np.ndarray, labels: Optional[List[str]] = None,
+                 width: int = 9) -> str:
+    n = mat.shape[0]
+    labels = labels or [str(i) for i in range(n)]
+    peak = mat.max() or 1.0
+    shades = " .:-=+*#%@"
+    out = []
+    for i in range(n):
+        row = "".join(shades[min(int(mat[i, j] / peak * (len(shades) - 1)),
+                                 len(shades) - 1)] for j in range(n))
+        out.append(f"{labels[i]:>6s} |{row}|")
+    return "\n".join(out)
+
+
+def timeline(trace: Trace, top: int = 30) -> str:
+    """Modeled serialized schedule of the heaviest collectives (Fig 3a)."""
+    evs = sorted(trace.events, key=lambda e: -(e.est_time_s * e.multiplicity))
+    t = 0.0
+    lines = [f"{'t_start_us':>10s} {'dur_us':>9s} {'x':>5s} {'kind':18s} "
+             f"{'link':16s} {'semantic':14s} scope"]
+    for e in evs[:top]:
+        dur = e.est_time_s * 1e6
+        lines.append(f"{t*1e6:10.1f} {dur:9.2f} {e.multiplicity:5d} "
+                     f"{e.kind:18s} {e.link_class:16s} {e.semantic:14s} "
+                     f"{e.scope[:48]}")
+        t += e.est_time_s * e.multiplicity
+    return "\n".join(lines)
+
+
+def summary(trace: Trace) -> str:
+    n_ev = sum(e.multiplicity for e in trace.events)
+    return (
+        f"trace '{trace.label}': mesh {trace.mesh_shape} axes {trace.mesh_axes}\n"
+        f"  collectives/step: {n_ev} ({len(trace.events)} sites)\n"
+        f"  collective bytes (operand conv): {trace.total_collective_bytes()/1e9:.3f} GB/device\n"
+        f"  wire bytes: {trace.total_wire_bytes()/1e9:.3f} GB total\n"
+        f"  modeled collective time: {trace.total_est_time_s()*1e3:.3f} ms (serialized)\n"
+        f"  HLO flops/device: {trace.hlo_flops/1e12:.3f} T, bytes: {trace.hlo_bytes/1e9:.2f} GB\n"
+        f"  per-device memory: {trace.per_device_memory_bytes/1e9:.2f} GB")
+
+
+# --------------------------------------------------------------------------
+# JSON / HTML
+# --------------------------------------------------------------------------
+
+def to_json(trace: Trace) -> str:
+    return json.dumps({
+        "label": trace.label,
+        "mesh_shape": trace.mesh_shape,
+        "mesh_axes": trace.mesh_axes,
+        "hlo_flops": trace.hlo_flops,
+        "hlo_bytes": trace.hlo_bytes,
+        "per_device_memory_bytes": trace.per_device_memory_bytes,
+        "events": [{
+            "name": e.name, "kind": e.kind, "bytes": e.operand_bytes,
+            "mult": e.multiplicity, "link": e.link_class,
+            "axes": e.axes, "semantic": e.semantic, "scope": e.scope,
+            "prim": e.jax_prim, "protocol": e.protocol,
+            "group_size": e.group_size, "num_groups": e.num_groups,
+            "est_time_us": e.est_time_s * 1e6,
+        } for e in trace.events],
+    }, indent=1)
+
+
+_HTML_HEAD = """<!doctype html><meta charset="utf-8">
+<title>repro trace: %s</title>
+<style>
+ body{font:13px monospace;background:#111;color:#ddd;margin:24px}
+ h2{color:#7fd} table{border-collapse:collapse;margin:12px 0}
+ td,th{border:1px solid #333;padding:3px 8px;text-align:right}
+ th{background:#222;color:#7fd} td.l{text-align:left}
+ .hm td{width:14px;height:14px;padding:0;border:1px solid #222}
+ .bar{background:#167;display:inline-block;height:10px}
+</style>"""
+
+
+def to_html(trace: Trace, mesh: MeshSpec) -> str:
+    """Self-contained HTML report (the interactive-visualizer analogue)."""
+    parts = [_HTML_HEAD % html_mod.escape(trace.label)]
+    parts.append(f"<h1>trace: {html_mod.escape(trace.label)}</h1>")
+    parts.append("<pre>" + html_mod.escape(summary(trace)) + "</pre>")
+
+    # top contenders
+    parts.append("<h2>top contenders (kind x link) — Table II analogue</h2>")
+    parts.append("<pre>" + html_mod.escape(top_contenders_table(trace)) + "</pre>")
+    parts.append("<h2>semantic (MPI-layer analogue)</h2>")
+    parts.append("<pre>" + html_mod.escape(semantic_table(trace)) + "</pre>")
+
+    # comm matrix heatmaps per axis
+    mat = comm_matrix(mesh, trace.events)
+    for axis in mesh.axes:
+        red = reduce_matrix(mat, mesh, axis)
+        peak = red.max() or 1.0
+        parts.append(f"<h2>comm matrix over axis '{axis}' (GB)</h2>")
+        rows = ["<table class='hm'>"]
+        for i in range(red.shape[0]):
+            cells = []
+            for j in range(red.shape[1]):
+                v = red[i, j] / peak
+                col = f"rgb({int(20+v*40)},{int(30+v*160)},{int(60+v*180)})"
+                cells.append(f"<td style='background:{col}' "
+                             f"title='{i}->{j}: {red[i,j]/1e9:.3f} GB'></td>")
+            rows.append("<tr>" + "".join(cells) + "</tr>")
+        rows.append("</table>")
+        parts.append("".join(rows))
+
+    # timeline
+    parts.append("<h2>modeled timeline (top collectives)</h2>")
+    parts.append("<pre>" + html_mod.escape(timeline(trace)) + "</pre>")
+    return "\n".join(parts)

@@ -1,0 +1,165 @@
+"""Mesh/torus topology model: replica groups -> mesh axes -> link classes.
+
+This is the `UCT transport` resolution layer: where ucTrace maps a UCT send
+to (rc_mlx5 | cuda_ipc | sysv | gdr_copy) + a NIC, we map an HLO collective's
+replica groups onto the device mesh and classify which interconnect the
+traffic rides: intra-pod ICI torus axes vs the inter-pod DCI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Hardware:
+    """TPU v5e-class constants (per chip / per link)."""
+
+    name: str = "tpu-v5e"
+    flops_bf16: float = 197e12          # peak bf16 FLOP/s per chip
+    hbm_bw: float = 819e9               # HBM bytes/s per chip
+    ici_bw: float = 50e9                # bytes/s per ICI link (per direction)
+    dci_bw: float = 25e9                # bytes/s per inter-pod link
+    ici_latency_s: float = 1e-6         # per-hop collective latency
+    dci_latency_s: float = 10e-6
+    hbm_per_chip: float = 16e9          # v5e HBM capacity
+    vmem_per_core: float = 128 * 2**20  # VMEM bytes
+    # eager/rendezvous analogue: below this payload a transfer is
+    # latency-dominated ("eager"), above it bandwidth-dominated ("rndv").
+    rndv_threshold: int = 1 << 16
+
+
+V5E = Hardware()
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Logical device mesh + interconnect class per axis."""
+
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    # axis name -> "ici" | "dci"
+    axis_kind: Dict[str, str] = field(default_factory=dict)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes)
+        if not self.axis_kind:
+            object.__setattr__(
+                self, "axis_kind",
+                {a: ("dci" if a == "pod" else "ici") for a in self.axes})
+
+    @property
+    def num_devices(self) -> int:
+        return int(np.prod(self.shape))
+
+    def coords(self, device_id: int) -> Tuple[int, ...]:
+        return tuple(int(c) for c in np.unravel_index(device_id, self.shape))
+
+    def coords_array(self, device_ids: Sequence[int]) -> np.ndarray:
+        return np.stack(np.unravel_index(np.asarray(device_ids), self.shape),
+                        axis=-1)
+
+    @classmethod
+    def single_pod(cls) -> "MeshSpec":
+        return cls((16, 16), ("data", "model"))
+
+    @classmethod
+    def multi_pod(cls) -> "MeshSpec":
+        return cls((2, 16, 16), ("pod", "data", "model"))
+
+
+def varying_axes(mesh: MeshSpec, group: Sequence[int]) -> Tuple[str, ...]:
+    """Which mesh axes vary across the devices of one replica group."""
+    if len(group) <= 1:
+        return ()
+    coords = mesh.coords_array(group)
+    out = []
+    for i, name in enumerate(mesh.axes):
+        if len(np.unique(coords[:, i])) > 1:
+            out.append(name)
+    return tuple(out)
+
+
+def link_class(mesh: MeshSpec, axes: Tuple[str, ...]) -> str:
+    """Transport-class label for a collective spanning `axes`."""
+    if not axes:
+        return "local"
+    if len(axes) == 1:
+        a = axes[0]
+        return f"{mesh.axis_kind[a]}.{a}"
+    kinds = {mesh.axis_kind[a] for a in axes}
+    label = "+".join(axes)
+    if kinds == {"ici"}:
+        return f"ici.mixed({label})"
+    if kinds == {"dci"}:
+        return f"dci.mixed({label})"
+    return f"xpod.mixed({label})"  # crosses both ICI and DCI
+
+
+def slowest_link_bw(mesh: MeshSpec, axes: Tuple[str, ...], hw: Hardware) -> float:
+    """Bottleneck link bandwidth for traffic spanning `axes`."""
+    if not axes:
+        return hw.hbm_bw
+    bws = [hw.dci_bw if mesh.axis_kind[a] == "dci" else hw.ici_bw for a in axes]
+    return min(bws)
+
+
+def hop_latency(mesh: MeshSpec, axes: Tuple[str, ...], hw: Hardware) -> float:
+    if not axes:
+        return 0.0
+    return max(hw.dci_latency_s if mesh.axis_kind[a] == "dci" else hw.ici_latency_s
+               for a in axes)
+
+
+def resolve_iota_groups(num_groups: int, group_size: int,
+                        reshape_dims: Sequence[int],
+                        transpose_perm: Optional[Sequence[int]]) -> List[List[int]]:
+    """Decode HLO iota replica groups `[G,S]<=[dims]T(perm)`."""
+    n = int(np.prod(reshape_dims))
+    ids = np.arange(n).reshape(tuple(reshape_dims))
+    if transpose_perm is not None:
+        ids = ids.transpose(tuple(transpose_perm))
+    ids = ids.reshape(num_groups, group_size)
+    return [list(map(int, row)) for row in ids]
+
+
+def comm_matrix(mesh: MeshSpec, events, resolution: str = "device") -> np.ndarray:
+    """Device x device wire-byte matrix (ring-model neighbor traffic).
+
+    The paper's Fig 3b analogue.  Ring collectives put traffic on ring
+    neighbors within each replica group; permutes follow their explicit
+    source->target pairs.
+    """
+    n = mesh.num_devices
+    mat = np.zeros((n, n))
+    for e in events:
+        mult = e.multiplicity
+        if e.source_target_pairs:
+            per = e.operand_bytes
+            for s, t in e.source_target_pairs:
+                mat[s, t] += per * mult
+            continue
+        for group in e.replica_groups:
+            g = len(group)
+            if g <= 1:
+                continue
+            per_link = e.wire_bytes_per_device * mult
+            for i, d in enumerate(group):
+                nxt = group[(i + 1) % g]
+                mat[d, nxt] += per_link
+    return mat
+
+
+def reduce_matrix(mat: np.ndarray, mesh: MeshSpec, axis: str) -> np.ndarray:
+    """Aggregate the device matrix to groups along one axis (viz)."""
+    ai = mesh.axes.index(axis)
+    k = mesh.shape[ai]
+    n = mat.shape[0]
+    labels = np.array([np.unravel_index(d, mesh.shape)[ai] for d in range(n)])
+    out = np.zeros((k, k))
+    for a in range(k):
+        for b in range(k):
+            out[a, b] = mat[np.ix_(labels == a, labels == b)].sum()
+    return out

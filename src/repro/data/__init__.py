@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, SyntheticTokens, shard_batch
+
+__all__ = ["DataConfig", "SyntheticTokens", "shard_batch"]

@@ -1,0 +1,102 @@
+"""Activation sharding constraints with graceful degradation.
+
+Model code calls `constrain(x, roles)` with *roles* ("batch" / "model" /
+"seq"), not axis names.  The step driver wraps tracing in
+`activation_sharding(mesh)`; outside that context (unit tests on one CPU
+device) constraints are no-ops, so the same model code runs everywhere.
+
+Divisibility is checked per dim, so e.g. batch=1 at 500k decode or
+whisper's 51865 vocab silently degrade to replicated instead of erroring —
+the tracer then *prices* the resulting traffic, which is the tool's job.
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from contextvars import ContextVar
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+_AXES: ContextVar[Optional[dict]] = ContextVar("repro_axes", default=None)
+
+ROLE_CANDIDATES = {
+    "batch": (("pod", "data"), ("data",)),
+    "model": (("model",),),
+    "seq": (("model",), ("data",)),
+    "seq_mp": (("data", "model"), ("model",), ("data",)),
+}
+
+
+@contextmanager
+def activation_sharding(mesh, *, seq_shard: bool = False):
+    """Enable activation constraints for code traced inside this context.
+
+    `seq_shard=True` turns on Megatron-SP-style sequence sharding of the
+    residual stream over the `model` axis: layer-boundary activation
+    checkpoints shrink by the TP degree (the all-gather/reduce-scatter
+    around each layer is the SP exchange, priced by the tracer).
+    """
+    sizes = dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+    token = _AXES.set({"sizes": sizes, "seq_shard": seq_shard, "mesh": mesh})
+    try:
+        with mesh:
+            yield
+    finally:
+        _AXES.reset(token)
+
+
+def current_mesh():
+    ctx = _AXES.get()
+    return ctx.get("mesh") if ctx else None
+
+
+def current_axes() -> Optional[Dict[str, int]]:
+    ctx = _AXES.get()
+    return ctx["sizes"] if ctx else None
+
+
+def _pick(dim: int, role: Optional[str], sizes: Dict[str, int], used: set):
+    if role is None:
+        return None
+    for cand in ROLE_CANDIDATES.get(role, ()):
+        if any(a not in sizes for a in cand) or (used & set(cand)):
+            continue
+        prod = int(np.prod([sizes[a] for a in cand]))
+        if dim % prod == 0 and dim >= prod:
+            return cand
+    return None
+
+
+def constrain(x, roles: Sequence[Optional[str]]):
+    """Apply a with_sharding_constraint described by per-dim roles."""
+    ctx = _AXES.get()
+    if not ctx:
+        return x
+    sizes = ctx["sizes"]
+    import jax
+    from jax.sharding import PartitionSpec as P
+
+    used: set = set()
+    parts = []
+    for dim, role in zip(x.shape, roles):
+        cand = _pick(dim, role, sizes, used)
+        if cand:
+            used |= set(cand)
+            parts.append(cand[0] if len(cand) == 1 else cand)
+        else:
+            parts.append(None)
+    if all(p is None for p in parts):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*parts))
+
+
+def constrain_residual(x):
+    """[B, S, D] activations (+ optional SP sequence sharding)."""
+    ctx = _AXES.get()
+    seq_role = "seq" if (ctx and ctx.get("seq_shard")) else None
+    return constrain(x, ("batch", seq_role, None))
+
+
+def constrain_logits(x):
+    """[B, S, V] logits (vocab TP when divisible)."""
+    return constrain(x, ("batch", None, "model"))

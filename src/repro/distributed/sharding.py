@@ -1,0 +1,203 @@
+"""Logical-axis -> mesh-axis sharding rules (DP/FSDP/TP/EP/SP).
+
+Every parameter declares *logical* axes (`embed`, `heads`, `mlp`, `expert`,
+...).  Rules map each logical axis to an ordered list of candidate mesh-axis
+tuples; the first candidate whose axes (a) exist in the mesh, (b) are not
+already used by another dim of the same tensor, and (c) divide the dimension
+evenly, wins.  This gives:
+
+  * FSDP/ZeRO-3: `embed`/`in_vocab` sharded over (pod, data),
+  * TP:          `heads`/`kv_heads`/`mlp`/`vocab`/`inner` over `model`,
+  * EP:          `expert` over `model` when E divides it (qwen3: 128/16),
+                 falling back to ffn-TP inside experts (mixtral: 8 < 16),
+  * SP:          long-context KV/state sharded over leftover axes.
+
+Archs whose dims don't divide an axis degrade gracefully to replication —
+the tracer prices the resulting traffic, which is the whole point.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models import api as model_api
+from repro.models.meta import tree_map_meta
+
+Rules = Dict[str, Tuple[Tuple[str, ...], ...]]
+
+# DP/FSDP axis preference: pod+data jointly, else data alone.
+_FSDP = (("pod", "data"), ("data",))
+# HSDP: shard within the pod, replicate across pods — per-layer weight
+# gathers stay on intra-pod ICI; the cross-pod DCI carries one gradient
+# all-reduce per step instead of per-layer-per-microbatch gathers.
+_FSDP_HIER = (("data",), ("pod", "data"))
+_TP = (("model",),)
+
+TRAIN_RULES: Rules = {
+    "embed": _FSDP,
+    # the input table shards along d_model (embed_tp) only: XLA's SPMD
+    # partitioner cannot partition gathers along the indexed (vocab) dim
+    # (invalid dynamic-slice after spmd-partitioning), and a D-sharded
+    # table makes the lookup comm-free anyway.
+    "in_vocab": (),
+    "heads": _TP,
+    "kv_heads": _TP,
+    "mlp": _TP,
+    "moe_mlp": _TP,
+    "inner": _TP,
+    "vocab": _TP,
+    "embed_tp": _TP,
+    "expert": _TP,
+    "layers": (),
+}
+
+# Serving: weights stay FSDP-sharded for frontier configs (weight-gather
+# amortized over the batch); small models replicate over data.
+SERVE_RULES_FSDP: Rules = TRAIN_RULES
+SERVE_RULES_REPLICATED: Rules = {**TRAIN_RULES, "embed": ()}
+
+TRAIN_RULES_HSDP: Rules = {**TRAIN_RULES, "embed": _FSDP_HIER}
+
+BATCH_AXES = (("pod", "data"), ("data",))
+
+
+def mesh_axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+def spec_for(shape: Sequence[int], logical: Sequence[Optional[str]],
+             rules: Rules, axis_sizes: Dict[str, int]) -> P:
+    parts = []
+    used: set = set()
+    for dim, name in zip(shape, logical):
+        chosen: Optional[Tuple[str, ...]] = None
+        if name is not None:
+            for cand in rules.get(name, ()):
+                if not cand:
+                    continue
+                if any(a not in axis_sizes for a in cand):
+                    continue
+                if used & set(cand):
+                    continue
+                prod = int(np.prod([axis_sizes[a] for a in cand]))
+                if dim % prod == 0:
+                    chosen = cand
+                    break
+        if chosen:
+            used |= set(chosen)
+            parts.append(chosen[0] if len(chosen) == 1 else chosen)
+        else:
+            parts.append(None)
+    return P(*parts)
+
+
+def shard_dim(dim: int, candidates, axis_sizes: Dict[str, int],
+              used: set) -> Optional[Tuple[str, ...]]:
+    for cand in candidates:
+        if not cand or any(a not in axis_sizes for a in cand) or (used & set(cand)):
+            continue
+        prod = int(np.prod([axis_sizes[a] for a in cand]))
+        if dim % prod == 0:
+            return cand
+    return None
+
+
+# --------------------------------------------------------------------------
+# model-level sharding trees
+# --------------------------------------------------------------------------
+
+def param_pspecs(cfg, mesh, rules: Rules = TRAIN_RULES):
+    sizes = mesh_axis_sizes(mesh)
+    meta_tree = model_api.model_meta(cfg)
+    return tree_map_meta(
+        lambda _p, m: spec_for(m.shape, m.logical, rules, sizes), meta_tree)
+
+
+def param_shardings(cfg, mesh, rules: Rules = TRAIN_RULES):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, mesh, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_state_pspecs(cfg, mesh, rules: Rules = TRAIN_RULES):
+    ps = param_pspecs(cfg, mesh, rules)
+    return {"m": ps, "v": ps, "count": P()}
+
+
+def batch_pspecs(cfg, shape, mesh):
+    """PartitionSpecs for the train/prefill batch dict."""
+    sizes = mesh_axis_sizes(mesh)
+    B = shape.global_batch
+    used: set = set()
+    b_axes = shard_dim(B, BATCH_AXES, sizes, used)
+    bspec = (b_axes[0] if len(b_axes) == 1 else b_axes) if b_axes else None
+    out = {}
+    for key, sds in model_api.batch_specs(cfg, shape).items():
+        if key == "positions":            # [3, B, S]
+            out[key] = P(None, bspec, None)
+        else:
+            out[key] = P(*([bspec] + [None] * (len(sds.shape) - 1)))
+    return out
+
+
+def _cache_entry_pspecs(entry, B, sizes, stacked: bool):
+    """PartitionSpecs for one cache entry (leading L dim when stacked)."""
+    lead = (None,) if stacked else ()
+    e: Dict[str, P] = {}
+    used: set = set()
+    b_axes = shard_dim(B, BATCH_AXES, sizes, used)
+    if b_axes:
+        used |= set(b_axes)
+    bspec = (b_axes[0] if len(b_axes) == 1 else b_axes) if b_axes else None
+    off = 1 if stacked else 0
+    for key, sds in entry.items():
+        if key in ("k", "v", "cross_k", "cross_v"):
+            sc = sds.shape[1 + off]
+            s_cands = (("model",),) if b_axes else \
+                (("data", "model"), ("model",), ("data",))
+            s_axes = shard_dim(sc, s_cands, sizes, used)
+            sspec = None
+            if s_axes:
+                sspec = s_axes[0] if len(s_axes) == 1 else s_axes
+            e[key] = P(*lead, bspec, sspec, None, None)
+        elif key == "conv":           # [B, dc-1, di]
+            di_axes = shard_dim(sds.shape[2 + off], _TP, sizes, used)
+            e[key] = P(*lead, bspec, None, di_axes[0] if di_axes else None)
+        elif key == "ssm":            # [B, di, N]
+            di_axes = shard_dim(sds.shape[1 + off], _TP, sizes, used)
+            e[key] = P(*lead, bspec, di_axes[0] if di_axes else None, None)
+        else:
+            e[key] = P(*([None] * len(sds.shape)))
+    return e
+
+
+def cache_pspecs(cfg, shape, mesh):
+    """Decode-cache PartitionSpecs (stacked dict or per-layer list).
+
+    Prefers batch-sharding over (pod, data) and sequence-sharding over
+    `model`; at 500k ctx with batch 1 the sequence takes every available
+    axis (SP).  SSM state shards its channel dim over `model`.
+    """
+    sizes = mesh_axis_sizes(mesh)
+    B = shape.global_batch
+    specs_in = model_api.cache_specs(cfg, shape)
+    if isinstance(specs_in, dict):
+        return _cache_entry_pspecs(specs_in, B, sizes, stacked=True)
+    return [_cache_entry_pspecs(entry, B, sizes, stacked=False)
+            for entry in specs_in]
+
+
+def serve_rules_for(cfg, mesh) -> Rules:
+    """Replicate weights over DP axes only when they comfortably fit."""
+    sizes = mesh_axis_sizes(mesh)
+    tp = sizes.get("model", 1)
+    bytes_per_dev = model_api.param_count(cfg) * 2 / tp   # bf16 serving
+    return SERVE_RULES_REPLICATED if bytes_per_dev < 4e9 else SERVE_RULES_FSDP
+
+
+def named(mesh, tree_of_pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))

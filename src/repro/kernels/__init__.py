@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+flash_attention.py  — online-softmax attention, VMEM-resident scores,
+                      causal/sliding-window block skipping, GQA index maps
+mamba_scan.py       — chunked selective scan, recurrent state in VMEM
+ops.py              — jitted wrappers (layout/padding/interpret plumbing)
+ref.py              — pure-jnp oracles (the allclose ground truth)
+
+The paper itself contributes no kernels (it is a profiler); these are
+framework hot-spots identified by the tracer (EXPERIMENTS.md §Perf H3/H7).
+"""

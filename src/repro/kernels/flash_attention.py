@@ -1,0 +1,122 @@
+"""Flash attention Pallas kernel (TPU target; validated with interpret=True).
+
+TPU-native design (not a CUDA port):
+  * BlockSpec tiling keeps one (bq x d) query tile + one (bk x d) KV tile in
+    VMEM; the MXU sees (bq x d) @ (d x bk) and (bq x bk) @ (bk x d) matmuls
+    with d and bk multiples of 128 (bq a multiple of 8 for fp32 sublanes).
+  * online softmax: running (m, l, acc) live in VMEM scratch across the
+    sequential kv grid dimension — scores NEVER touch HBM (the whole point;
+    the XLA `blocked` path writes them per chunk, see EXPERIMENTS.md §Perf).
+  * causal + sliding-window block skipping via `pl.when`: fully-masked
+    (q-block, kv-block) pairs skip both MXU passes, recovering the ~2x
+    triangular waste the XLA path pays.
+  * GQA: grid is (B, H, nq, nk); the kv head index is h // (H // K) in the
+    index_map, so no KV replication in HBM.
+
+head_dim is padded to a multiple of 128 by the wrapper (h2o-danube: 120).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: int, q_offset: int,
+            bq: int, bk: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * bq + q_offset
+    k_start = ki * bk
+
+    # block-level relevance: skip blocks fully above the causal diagonal or
+    # fully outside the sliding window
+    relevant = True
+    if causal:
+        relevant = jnp.logical_and(True, k_start <= q_start + bq - 1)
+    if window > 0:
+        relevant = jnp.logical_and(relevant,
+                                   k_start + bk - 1 >= q_start - window + 1)
+
+    @pl.when(relevant)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0, 0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_idx = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_idx = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            ok = jnp.logical_and(ok, k_idx <= q_idx)
+        if window > 0:
+            ok = jnp.logical_and(ok, (q_idx - k_idx) < window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                         # [bq, bk]
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    scale=None, bq=128, bk=128, interpret=False):
+    """q [B,H,Sq,D], k/v [B,K,Skv,D] -> [B,H,Sq,D].  D % 128 == 0."""
+    B, H, Sq, D = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    assert H % K == 0, (H, K)
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    bq = min(bq, Sq)
+    bk = min(bk, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    nq, nk = Sq // bq, Skv // bk
+
+    grid = (B, H, nq, nk)
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),   # m (running max)
+            pltpu.VMEM((bq, 1), jnp.float32),   # l (running denom)
+            pltpu.VMEM((bq, D), jnp.float32),   # acc (unnormalized out)
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,76 @@
+"""Selective-scan (Mamba-1) Pallas kernel (TPU target; interpret-validated).
+
+TPU-native layout (not a port of the CUDA scan):
+  * inputs are the discretized terms a_bar, bx [B, S, Di, N] and the readout
+    c [B, S, N] (computed by dense einsums outside — those are MXU work and
+    XLA handles them well; the *scan* is the part XLA does badly),
+  * grid (B, n_chunks, Di/blk): the chunk axis is sequential; the recurrent
+    state h [blk, N] lives in VMEM scratch and never touches HBM between
+    chunks — the XLA path writes the full [B, S, Di, N] h history,
+  * within a chunk the recurrence runs as a fori_loop of VPU ops over
+    timesteps; channels (Di x N = 8192 x 16 for falcon-mamba) provide the
+    vector parallelism, matching the v5e 8x128 VREG shape.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_ref, bx_ref, c_ref, y_ref, h_ref, *, chunk: int):
+    ci = pl.program_id(2)   # chunk axis is innermost (sequential, carries h)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    def step(t, h):
+        a_t = a_ref[0, t]                      # [blk, N]
+        bx_t = bx_ref[0, t]
+        c_t = c_ref[0, t]                      # [1, N]
+        h = a_t * h + bx_t
+        y_ref[0, t] = (h * c_t).sum(axis=-1).astype(y_ref.dtype)   # [blk]
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+def mamba_scan(a_bar, bx, c, *, chunk=256, di_block=512, interpret=False):
+    """h_t = a_t * h_{t-1} + bx_t;  y_t[d] = sum_n h_t[d,n] * c_t[n].
+
+    a_bar, bx: [B, S, Di, N] fp32;  c: [B, S, N] fp32  ->  y [B, S, Di] fp32.
+    """
+    B, S, Di, N = a_bar.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    di_block = min(di_block, Di)
+    while Di % di_block:
+        di_block //= 2
+    n_chunks = S // chunk
+    n_di = Di // di_block
+
+    grid = (B, n_di, n_chunks)   # chunks innermost: h carried across them
+    kernel = functools.partial(_kernel, chunk=chunk)
+    y = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, di_block, N),
+                         lambda b, di, ci: (b, ci, di, 0)),
+            pl.BlockSpec((1, chunk, di_block, N),
+                         lambda b, di, ci: (b, ci, di, 0)),
+            pl.BlockSpec((1, chunk, 1, N), lambda b, di, ci: (b, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, di_block),
+                               lambda b, di, ci: (b, ci, di)),
+        out_shape=jax.ShapeDtypeStruct((B, S, Di), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((di_block, N), jnp.float32)],
+        interpret=interpret,
+    )(a_bar, bx, c[:, :, None, :])
+    return y

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                        scale=None):
+    """q [B,H,Sq,D], k/v [B,K,Skv,D] -> [B,H,Sq,D] (fp32 softmax)."""
+    B, H, Sq, D = q.shape
+    K, Skv = k.shape[1], k.shape[2]
+    G = H // K
+    scale = scale if scale is not None else D ** -0.5
+    kf = jnp.repeat(k, G, axis=1)
+    vf = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) * scale
+    qi = (jnp.arange(Sq) + q_offset)[:, None]
+    ki = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= ki <= qi
+    if window and window > 0:
+        ok &= (qi - ki) < window
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vf.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def mamba_scan_ref(a_bar, bx, c):
+    """Sequential reference: h_t = a_t h_{t-1} + bx_t; y_t = <h_t, c_t>.
+
+    a_bar/bx [B,S,Di,N] fp32, c [B,S,N] fp32 -> y [B,S,Di] fp32.
+    """
+    B, S, Di, N = a_bar.shape
+
+    def step(h, t):
+        a_t, bx_t, c_t = t
+        h = a_t * h + bx_t                          # [B,Di,N]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    h0 = jnp.zeros((B, Di, N), jnp.float32)
+    _, ys = jax.lax.scan(step, h0,
+                         (a_bar.swapaxes(0, 1), bx.swapaxes(0, 1),
+                          c.swapaxes(0, 1)))
+    return ys.swapaxes(0, 1)                        # [B,S,Di]

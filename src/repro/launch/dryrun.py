@@ -1,0 +1,317 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  This module is the ONLY place that forces 512
+# placeholder devices; tests and benchmarks see the real device count.
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, SHAPE_ORDER, get_config, shape_applicable
+from repro.core import MeshSpec, roofline, trace_from_hlo
+from repro.core.report import summary, to_html, to_json, top_contenders_table, semantic_table
+from repro.core.roofline import decode_model_flops, train_model_flops
+from repro.distributed import sharding as sh
+from repro.distributed.autoshard import activation_sharding
+from repro.launch import presets, steps
+from repro.launch.mesh import make_mesh_spec, make_production_mesh
+from repro.models import api as model_api
+from repro.optim import adamw
+
+
+def analytic_memory_bytes(cfg, shape, st, mesh, rules) -> Dict[str, float]:
+    """Per-device HBM model at *declared* dtypes.
+
+    `memory_analysis()` on the CPU host backend over-reports bf16 programs:
+    CPU float-normalization upcasts bf16 dots to f32, which drags the saved
+    residual stacks (and their loop carries) to f32 — a backend artifact a
+    TPU compile does not share (native bf16 MXU).  This estimator prices the
+    structural buffers exactly (sharded params / optimizer moments / grad
+    accumulators / layer-boundary remat saves / KV caches / batch) and adds
+    15% working-set slack.
+    """
+    import numpy as np
+    from repro.models.meta import tree_map_meta, is_meta
+
+    sizes = sh.mesh_axis_sizes(mesh)
+    meta_tree = model_api.model_meta(cfg)
+    pspecs = sh.param_pspecs(cfg, mesh, rules)
+
+    def local_count(meta, spec):
+        n = int(np.prod(meta.shape))
+        div = 1
+        for part in spec:
+            if part is None:
+                continue
+            axes = (part,) if isinstance(part, str) else part
+            for a in axes:
+                div *= sizes[a]
+        return n // max(div, 1)
+
+    flat_meta = jax.tree.leaves(meta_tree, is_leaf=is_meta)
+    flat_spec = jax.tree.leaves(pspecs,
+                                is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    param_elems = sum(local_count(m, s) for m, s in zip(flat_meta, flat_spec))
+
+    out: Dict[str, float] = {}
+    B, S = shape.global_batch, shape.seq_len
+    dp = sizes.get("data", 1) * sizes.get("pod", 1)
+    if shape.kind == "train":
+        pbytes = param_elems * 4                       # fp32 masters
+        opt_b = 2 * param_elems * (2 if st.opt_state_dtype == "bfloat16" else 4)
+        accum_b = param_elems * (2 if st.accum_dtype == "bfloat16" else 4) \
+            if st.accum > 1 else 0
+        grad_b = param_elems * 4                       # live grad during update
+        tok_local = max(B // dp, 1) * S // max(st.accum, 1)
+        saves = cfg.num_layers * tok_local * cfg.d_model * 2
+        if st.seq_shard:
+            saves //= max(sizes.get("model", 1), 1)
+        if cfg.family == "encdec":
+            saves += cfg.encoder_layers * max(B // dp, 1) * cfg.source_len \
+                * cfg.d_model * 2
+        out.update(params=pbytes, opt=opt_b, accum=accum_b, grad=grad_b,
+                   saves=saves)
+    else:
+        out["params"] = param_elems * 2                # bf16 serving weights
+        if shape.kind == "decode":
+            cache = model_api.cache_specs(cfg, shape)
+            cps = sh.cache_pspecs(cfg, shape, mesh)
+            centries = [cache] if isinstance(cache, dict) else cache
+            cpss = [cps] if isinstance(cps, dict) else cps
+            cb = 0
+            for entry, especs in zip(centries, cpss):
+                for k, sds in entry.items():
+                    n = int(np.prod(sds.shape))
+                    div = 1
+                    for part in especs[k]:
+                        if part is None:
+                            continue
+                        axes = (part,) if isinstance(part, str) else part
+                        for a in axes:
+                            div *= sizes[a]
+                    cb += (n // max(div, 1)) * jnp.dtype(sds.dtype).itemsize
+            out["cache"] = float(cb)
+        else:  # prefill: caches produced as outputs + activations
+            tok_local = max(B // dp, 1) * S
+            kvb = cfg.num_layers * tok_local * cfg.kv_dim * 2 * 2
+            out["cache"] = kvb / max(sizes.get("model", 1), 1) \
+                if cfg.family != "ssm" else 0.0
+            out["acts"] = tok_local * cfg.d_model * 2 * 4
+    total = sum(out.values())
+    out["total_with_slack"] = total * 1.15
+    return out
+
+
+def _serve_rules(cfg, mesh, st):
+    if st.serve_fsdp is None:
+        return sh.serve_rules_for(cfg, mesh)
+    return sh.SERVE_RULES_FSDP if st.serve_fsdp else sh.SERVE_RULES_REPLICATED
+
+
+def abstract_opt_state(params_abs, state_dtype: str):
+    dt = jnp.dtype(state_dtype)
+    z = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"m": jax.tree.map(z, params_abs),
+            "v": jax.tree.map(z, params_abs),
+            "count": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               settings: Optional[presets.StepSettings] = None,
+               mesh=None, mesh_spec: Optional[MeshSpec] = None,
+               compile_: bool = True,
+               cfg_overrides: Optional[Dict[str, Any]] = None
+               ) -> Dict[str, Any]:
+    """Lower+compile one (arch x shape x mesh) cell; return artifacts."""
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "skipped": reason}
+
+    st = settings or presets.settings_for(arch, shape_name)
+    if mesh is None:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        mesh_spec = make_mesh_spec(multi_pod=multi_pod)
+    assert mesh_spec is not None
+
+    # training keeps fp32 masters; serving runs bf16 weights
+    params_abs = model_api.abstract_params(
+        cfg, "float32" if shape.kind == "train" else "bfloat16")
+    t0 = time.perf_counter()
+
+    if shape.kind == "train":
+        rules = sh.TRAIN_RULES_HSDP if st.hsdp else sh.TRAIN_RULES
+        pspecs = sh.param_pspecs(cfg, mesh, rules)
+        opt_cfg = adamw.AdamWConfig(state_dtype=st.opt_state_dtype)
+        step = steps.make_train_step(cfg, opt_cfg, st)
+        opt_abs = abstract_opt_state(params_abs, st.opt_state_dtype)
+        batch_abs = model_api.batch_specs(cfg, shape)
+        in_sh = (sh.named(mesh, pspecs),
+                 sh.named(mesh, {"m": pspecs, "v": pspecs,
+                                 "count": jax.sharding.PartitionSpec()}),
+                 sh.named(mesh, sh.batch_pspecs(cfg, shape, mesh)))
+        out_sh = (in_sh[0], in_sh[1], None)
+        jfn = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                      donate_argnums=(0, 1))
+        args = (params_abs, opt_abs, batch_abs)
+        n_tokens = shape.global_batch * shape.seq_len
+        model_flops = train_model_flops(model_api.flops_param_count(cfg), n_tokens)
+
+    elif shape.kind == "prefill":
+        rules = _serve_rules(cfg, mesh, st)
+        pspecs = sh.param_pspecs(cfg, mesh, rules)
+        step = steps.make_prefill_step(cfg, st)
+        batch_abs = model_api.batch_specs(cfg, shape)
+        in_sh = (sh.named(mesh, pspecs),
+                 sh.named(mesh, sh.batch_pspecs(cfg, shape, mesh)))
+        jfn = jax.jit(step, in_shardings=in_sh)
+        args = (params_abs, batch_abs)
+        n_tokens = shape.global_batch * shape.seq_len
+        model_flops = decode_model_flops(model_api.flops_param_count(cfg), n_tokens)
+
+    else:  # decode
+        rules = _serve_rules(cfg, mesh, st)
+        pspecs = sh.param_pspecs(cfg, mesh, rules)
+        step = steps.make_decode_step(cfg, st)
+        dspec = model_api.decode_input_specs(cfg, shape)
+        cache_ps = sh.cache_pspecs(cfg, shape, mesh)
+        P = jax.sharding.PartitionSpec
+        in_sh = [sh.named(mesh, pspecs), sh.named(mesh, cache_ps),
+                 jax.sharding.NamedSharding(mesh, P(None, None)),
+                 jax.sharding.NamedSharding(mesh, P())]
+        args = [params_abs, dspec["cache"], dspec["tokens"], dspec["pos"]]
+        if cfg.family == "vlm":
+            in_sh.append(jax.sharding.NamedSharding(mesh, P(None, None, None)))
+            args.append(dspec["positions"])
+        jfn = jax.jit(step, in_shardings=tuple(in_sh), donate_argnums=(1,))
+        args = tuple(args)
+        model_flops = decode_model_flops(model_api.flops_param_count(cfg),
+                                         shape.global_batch)
+
+    with activation_sharding(mesh, seq_shard=(st.seq_shard and
+                                              shape.kind == "train")):
+        lowered = jfn.lower(*args)
+    t_lower = time.perf_counter() - t0
+    result: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(map(str, mesh_spec.shape)),
+        "lower_s": round(t_lower, 2),
+    }
+    if not compile_:
+        result["lowered"] = lowered
+        return result
+
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    result["compile_s"] = round(time.perf_counter() - t1, 2)
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    t2 = time.perf_counter()
+    trace = trace_from_hlo(compiled.as_text(), mesh_spec,
+                           label=f"{arch}/{shape_name}/{result['mesh']}",
+                           cost_analysis=cost, memory_analysis=mem)
+    result["parse_s"] = round(time.perf_counter() - t2, 2)
+    rf = roofline(trace, model_flops=model_flops)
+    result.update(rf.row())
+    result["collective_bytes_per_dev"] = trace.total_collective_bytes()
+    result["coll_overlap_ms"] = round(trace.overlapped_est_time_s() * 1e3, 3)
+    result["n_collectives"] = int(sum(e.multiplicity for e in trace.events))
+    mem_model = analytic_memory_bytes(cfg, shape, st, mesh, rules)
+    result["mem_model_gb"] = round(mem_model["total_with_slack"] / 1e9, 2)
+    # fits: analytic model at TPU dtypes (memory_analysis() on the CPU host
+    # backend upcasts bf16 stacks to f32 — see analytic_memory_bytes)
+    result["fits_hbm"] = bool(mem_model["total_with_slack"] <= 16e9)
+    result["trace"] = trace
+    result["compiled"] = compiled
+    return result
+
+
+def run_cli():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, help="arch id or 'all'")
+    ap.add_argument("--shape", default=None, help="shape name or 'all'")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="JSON results path (append)")
+    ap.add_argument("--html", default=None, help="write HTML trace report dir")
+    ap.add_argument("--tables", action="store_true",
+                    help="print top-contenders + semantic tables")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--grad-compression", default=None)
+    args = ap.parse_args()
+
+    archs = list(ARCHS) if args.arch in (None, "all") else [args.arch]
+    shapes = list(SHAPE_ORDER) if args.shape in (None, "all") else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    rows = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                st = presets.settings_for(arch, shape_name)
+                if args.accum:
+                    st = dataclasses.replace(st, accum=args.accum)
+                if args.remat:
+                    st = dataclasses.replace(st, remat=args.remat)
+                if args.grad_compression:
+                    st = dataclasses.replace(st, grad_compression=args.grad_compression)
+                try:
+                    r = lower_cell(arch, shape_name, multi_pod=mp, settings=st)
+                except Exception as e:
+                    print(f"FAIL  {arch:24s} {shape_name:12s} "
+                          f"{type(e).__name__}: {str(e)[:200]}")
+                    rows.append({"arch": arch, "shape": shape_name,
+                                 "failed": f"{type(e).__name__}: {str(e)[:300]}"})
+                    continue
+                if "skipped" in r:
+                    print(f"SKIP  {arch:24s} {shape_name:12s} {r['skipped']}")
+                    rows.append(r)
+                    continue
+                tr = r.pop("trace")
+                compiled = r.pop("compiled")
+                print(f"OK    {arch:24s} {shape_name:12s} mesh={r['mesh']:9s} "
+                      f"mem={r['mem_model_gb']:6.2f}GB(model)/"
+                      f"{r['mem_gb_per_dev']:7.2f}GB(cpu) "
+                      f"fits={'Y' if r['fits_hbm'] else 'N'} "
+                      f"comp={r['compute_ms']:9.2f}ms "
+                      f"hbm={r['memory_ms']:9.2f}ms "
+                      f"coll={r['collective_ms']:9.2f}ms "
+                      f"dom={r['dominant']:10s} mfu_bound={r['mfu_bound']:.3f} "
+                      f"useful={r['useful_ratio']:.2f} "
+                      f"(lower {r['lower_s']}s compile {r['compile_s']}s)")
+                print("      memory_analysis:", compiled.memory_analysis())
+                if args.tables:
+                    print(top_contenders_table(tr))
+                    print(semantic_table(tr))
+                if args.html:
+                    os.makedirs(args.html, exist_ok=True)
+                    name = f"{arch}_{shape_name}_{r['mesh']}"
+                    spec = make_mesh_spec(multi_pod=mp)
+                    with open(os.path.join(args.html, name + ".html"), "w") as f:
+                        f.write(to_html(tr, spec))
+                    with open(os.path.join(args.html, name + ".json"), "w") as f:
+                        f.write(to_json(tr))
+                rows.append(r)
+    if args.out:
+        existing = []
+        if os.path.exists(args.out):
+            with open(args.out) as f:
+                existing = json.load(f)
+        with open(args.out, "w") as f:
+            json.dump(existing + rows, f, indent=1, default=str)
+    return rows
+
+
+if __name__ == "__main__":
+    run_cli()

@@ -1,0 +1,26 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state; `dryrun.py` sets `--xla_force_host_platform_device_count=512`
+before any jax import, everything else sees the real device count.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.topology import MeshSpec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    return MeshSpec.multi_pod() if multi_pod else MeshSpec.single_pod()
+
+
+def make_host_mesh(shape=(2, 4), axes=("data", "model")):
+    """Small mesh over forced host devices (tests / examples)."""
+    return jax.make_mesh(shape, axes), MeshSpec(tuple(shape), tuple(axes))

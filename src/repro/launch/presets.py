@@ -1,0 +1,65 @@
+"""Per-(arch x shape) execution settings: gradient-accumulation factor,
+remat policy, attention impl.  Derived from HBM napkin math (v5e 16 GB):
+activation checkpoints per layer must fit next to FSDP-sharded params +
+optimizer moments.  Overridable from the CLI.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+
+@dataclass(frozen=True)
+class StepSettings:
+    accum: int = 1                 # gradient-accumulation microbatches
+    remat: str = "full"            # none | dots | full
+    attn_impl: str = "auto"        # auto | naive | blocked | pallas
+    opt_state_dtype: str = "float32"
+    accum_dtype: str = "float32"   # gradient-accumulator dtype
+    seq_shard: bool = False        # Megatron-SP residual sequence sharding
+    moe_group_size: int = 512
+    # beyond-paper optimization toggles (see EXPERIMENTS.md §Perf)
+    grad_compression: str = "none"   # none | bf16
+    moe_dispatch: str = "einsum"     # einsum | sort
+    # serving weight placement: None = auto (FSDP iff weights don't fit
+    # replicated-over-data), True/False forces it
+    serve_fsdp: "bool | None" = None
+    # HSDP: shard params intra-pod, replicate across pods (multi-pod only)
+    hsdp: bool = False
+
+
+# train_4k accumulation per arch (per-device checkpoint-bytes bound)
+_TRAIN_ACCUM = {
+    "llama3-405b": 16,
+    "mixtral-8x22b": 16,
+    "qwen3-moe-235b-a22b": 16,
+    "falcon-mamba-7b": 8,
+    "chatglm3-6b": 4,
+    "gemma3-4b": 4,
+    "h2o-danube-3-4b": 4,
+    "hymba-1.5b": 2,
+    "qwen2-vl-2b": 2,
+    "whisper-tiny": 1,
+}
+
+# frontier configs: bf16 moments + bf16 grad accumulation + SP residuals
+# (fp32 everything needs >16 GB/dev on one 256-chip pod)
+_BIG = ("llama3-405b", "qwen3-moe-235b-a22b", "mixtral-8x22b")
+
+
+def settings_for(arch: str, shape_name: str) -> StepSettings:
+    if shape_name == "train_4k":
+        big = arch in _BIG
+        return StepSettings(
+            accum=_TRAIN_ACCUM.get(arch, 4),
+            remat="full",
+            opt_state_dtype="bfloat16" if big else "float32",
+            accum_dtype="bfloat16" if big else "float32",
+            # SP residual sharding (Megatron-SP) was explored for every big
+            # arch and REFUTED by the tracer: the per-layer AG/RS exchange
+            # multiplies the collective term 5-10x on this mesh (MoE group
+            # reshapes and SSM chunk scans re-gather besides) — see
+            # EXPERIMENTS.md §Perf hypothesis H2.  Saves stay batch-sharded.
+            seq_shard=False,
+        )
+    # serving shapes: no accumulation/remat
+    return StepSettings(accum=1, remat="none")

@@ -1,0 +1,93 @@
+"""Step factories: train (fwd+bwd+AdamW, grad accumulation), prefill, decode.
+
+All steps are pure jittable functions; `launch.dryrun` lowers them against
+ShapeDtypeStructs, `launch.train`/`launch.serve` execute them.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.presets import StepSettings
+from repro.models import api as model_api
+from repro.optim import adamw
+
+
+def _split_micro(batch: Dict[str, jax.Array], accum: int):
+    """[B, ...] -> [accum, B/accum, ...] per leaf (token/embed leaves only)."""
+    def re(a):
+        if a.ndim >= 1 and a.shape[0] % accum == 0 and a.shape[0] >= accum:
+            return a.reshape(accum, a.shape[0] // accum, *a.shape[1:])
+        return a
+    out = {}
+    for k, v in batch.items():
+        if k == "positions":   # [3, B, S]
+            out[k] = v.reshape(v.shape[0], accum, v.shape[1] // accum,
+                               *v.shape[2:]).swapaxes(0, 1)
+        else:
+            out[k] = re(v)
+    return out
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig, st: StepSettings):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+
+    def loss_for(params, micro):
+        return model_api.loss_fn(cfg, params, micro,
+                                 attn_impl=st.attn_impl, remat=st.remat)
+
+    def train_step(params, opt_state, batch):
+        if st.accum > 1:
+            micro = _split_micro(batch, st.accum)
+            acc_dt = jnp.dtype(st.accum_dtype)
+
+            def acc_step(carry, mb):
+                g_acc, l_acc = carry
+                l, g = jax.value_and_grad(loss_for)(params, mb)
+                g = jax.tree.map(
+                    lambda a, b: a + (b / st.accum).astype(a.dtype), g_acc, g)
+                return (g, l_acc + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(
+                acc_step, (g0, jnp.zeros((), jnp.float32)), micro)
+            loss = loss_sum / st.accum
+        else:
+            loss, grads = jax.value_and_grad(loss_for)(params, batch)
+
+        if st.grad_compression == "bf16":
+            # beyond-paper: cast the gradient before cross-device reduction
+            # (halves grad-sync wire bytes; stochastic-rounding-free variant)
+            with jax.named_scope("grad_compress"):
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.bfloat16).astype(jnp.float32), grads)
+
+        new_params, new_opt, metrics = adamw.update(opt_cfg, grads, opt_state,
+                                                    params)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg, st: StepSettings):
+    def eval_step(params, batch):
+        return model_api.loss_fn(cfg, params, batch, attn_impl=st.attn_impl)
+    return eval_step
+
+
+def make_prefill_step(cfg, st: StepSettings, cache_len=None):
+    def prefill_step(params, batch):
+        return model_api.prefill(cfg, params, batch, attn_impl=st.attn_impl,
+                                 cache_len=cache_len)
+    return prefill_step
+
+
+def make_decode_step(cfg, st: StepSettings):
+    def decode_step(params, cache, tokens, pos, positions=None):
+        return model_api.decode_step(cfg, params, cache, tokens, pos,
+                                     positions=positions)
+    return decode_step

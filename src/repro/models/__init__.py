@@ -1,0 +1,2 @@
+"""Model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones."""
+from repro.models import api  # noqa: F401

@@ -1,0 +1,235 @@
+"""GQA attention: projections, full/blocked softmax paths, KV-cache decode.
+
+Three compute paths:
+  * ``naive``   — materialize [.., S, S] scores (small seqs / smoke tests)
+  * ``blocked`` — online-softmax over KV chunks in pure XLA (lax.scan);
+                  the portable memory-bounded path used for 32k prefill.
+  * ``pallas``  — TPU flash-attention kernel (repro.kernels.flash_attention);
+                  numerically validated against ``naive`` in interpret mode.
+
+Keys are cached *post-RoPE*; windowed (ring-buffer) caches rely on attention
+being permutation-invariant over keys.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.meta import ParamMeta
+from repro.models.layers import apply_rope, rms_norm_head
+
+NEG_INF = -1e30
+
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (chunking non-power-of-2 seqs)."""
+    cap = max(1, min(cap, n))
+    for d in range(cap, 0, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def attention_meta(cfg, cross: bool = False):
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    m = {
+        "wq": ParamMeta((d, qd), ("embed", "heads")),
+        "wk": ParamMeta((d, kvd), ("embed", "kv_heads")),
+        "wv": ParamMeta((d, kvd), ("embed", "kv_heads")),
+        "wo": ParamMeta((qd, d), ("heads", "embed")),
+    }
+    if cfg.qk_norm:
+        m["q_norm"] = ParamMeta((cfg.head_dim,), (None,), init="ones")
+        m["k_norm"] = ParamMeta((cfg.head_dim,), (None,), init="ones")
+    return m
+
+
+def project_qkv(cfg, p, x_q, x_kv, positions_q, positions_kv):
+    """Project and rope. x_q [B,Sq,D], x_kv [B,Skv,D] -> q[B,Sq,H,Dh], k/v[B,Skv,K,Dh]."""
+    dt = x_q.dtype
+    B, Sq, _ = x_q.shape
+    Skv = x_kv.shape[1]
+    H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dh->bsh", x_q, p["wq"].astype(dt)).reshape(B, Sq, H, Dh)
+    k = jnp.einsum("bsd,dh->bsh", x_kv, p["wk"].astype(dt)).reshape(B, Skv, K, Dh)
+    v = jnp.einsum("bsd,dh->bsh", x_kv, p["wv"].astype(dt)).reshape(B, Skv, K, Dh)
+    if cfg.qk_norm:
+        q = rms_norm_head(q, p["q_norm"])
+        k = rms_norm_head(k, p["k_norm"])
+    if positions_q is not None:
+        q = apply_rope(cfg, q, positions_q)
+    if positions_kv is not None:
+        k = apply_rope(cfg, k, positions_kv)
+    return q, k, v
+
+
+def _mask_bias(q_idx, k_idx, *, causal: bool, window) -> jax.Array:
+    """Additive bias [.., Sq, Skv] from index grids (fp32)."""
+    ok = jnp.ones(jnp.broadcast_shapes(q_idx.shape, k_idx.shape), bool)
+    if causal:
+        ok &= k_idx <= q_idx
+    if window is not None:
+        # traced or static window; 0 = full attention
+        w = jnp.asarray(window, jnp.int32)
+        ok &= jnp.where(w > 0, (q_idx - k_idx) < w, True)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def attend_naive(cfg, q, k, v, *, causal=True, window=0, q_offset=0,
+                 kv_valid_len: Optional[jax.Array] = None):
+    """q [B,Sq,H,Dh], k/v [B,Skv,K,Dh] -> [B,Sq,H,Dh]."""
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (cfg.head_dim ** -0.5)
+    q_idx = (jnp.arange(Sq, dtype=jnp.int32) + q_offset)[:, None]
+    k_idx = jnp.arange(Skv, dtype=jnp.int32)[None, :]
+    bias = _mask_bias(q_idx, k_idx, causal=causal, window=window)
+    if kv_valid_len is not None:
+        valid = k_idx < jnp.asarray(kv_valid_len, jnp.int32)
+        bias = bias + jnp.where(valid, 0.0, NEG_INF)
+    scores = scores + bias
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, Dh)
+
+
+def attend_blocked(cfg, q, k, v, *, causal=True, window=0, q_offset=0,
+                   kv_chunk=1024):
+    """Online-softmax over KV chunks (pure XLA, memory-bounded).
+
+    Computes all (q, kv-chunk) pairs with masking; the Pallas kernel skips
+    fully-masked blocks (see kernels/flash_attention.py).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    K = k.shape[2]
+    G = H // K
+    kv_chunk = largest_divisor_leq(Skv, min(kv_chunk, Skv))
+    n_chunks = Skv // kv_chunk
+    qg = q.reshape(B, Sq, K, G, Dh)
+    kc = k.reshape(B, n_chunks, kv_chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, K, Dh).transpose(1, 0, 2, 3, 4)
+    q_idx = (jnp.arange(Sq, dtype=jnp.int32) + q_offset)[:, None]
+    scale = cfg.head_dim ** -0.5
+
+    def step(carry, chunk):
+        m, l, acc = carry
+        kj, vj, j = chunk
+        scores = jnp.einsum("bskgd,btkd->bkgst", qg, kj,
+                            preferred_element_type=jnp.float32) * scale
+        k_idx = (jnp.arange(kv_chunk, dtype=jnp.int32) + j * kv_chunk)[None, :]
+        scores = scores + _mask_bias(q_idx, k_idx, causal=causal, window=window)
+        m_new = jnp.maximum(m, scores.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vj.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    acc0 = jnp.zeros((B, K, G, Sq, Dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc, vc, jnp.arange(n_chunks, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, Dh).astype(q.dtype)
+
+
+def attend(cfg, q, k, v, *, causal=True, window=0, q_offset=0, impl="auto",
+           kv_valid_len=None):
+    if impl == "auto":
+        big = q.shape[1] * k.shape[1] > (1 << 22) or k.shape[1] > 2048
+        impl = "blocked" if big and kv_valid_len is None else "naive"
+    if impl == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(cfg, q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset)
+    if impl == "blocked":
+        return attend_blocked(cfg, q, k, v, causal=causal, window=window,
+                              q_offset=q_offset)
+    return attend_naive(cfg, q, k, v, causal=causal, window=window,
+                        q_offset=q_offset, kv_valid_len=kv_valid_len)
+
+
+def apply_attention(cfg, p, x, positions, *, causal=True, window=0, impl="auto"):
+    """Self-attention over x [B,S,D]."""
+    with jax.named_scope("attn"):
+        q, k, v = project_qkv(cfg, p, x, x, positions, positions)
+        out = attend(cfg, q, k, v, causal=causal, window=window, impl=impl)
+        dt = x.dtype
+        return jnp.einsum("bsz,zd->bsd",
+                          out.reshape(*out.shape[:2], -1), p["wo"].astype(dt))
+
+
+def apply_cross_attention(cfg, p, x, memory_kv):
+    """Cross-attention: queries from x, cached (k, v) from encoder memory."""
+    with jax.named_scope("cross_attn"):
+        dt = x.dtype
+        B, Sq, _ = x.shape
+        H, Dh = cfg.num_heads, cfg.head_dim
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"].astype(dt)).reshape(B, Sq, H, Dh)
+        k, v = memory_kv
+        out = attend(cfg, q, k, v, causal=False, window=0, impl="auto")
+        return jnp.einsum("bsz,zd->bsd", out.reshape(B, Sq, -1), p["wo"].astype(dt))
+
+
+def encode_memory_kv(cfg, p, memory):
+    """Precompute cross-attention K/V from encoder output [B,Sm,D]."""
+    dt = memory.dtype
+    B, Sm, _ = memory.shape
+    K, Dh = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dh->bsh", memory, p["wk"].astype(dt)).reshape(B, Sm, K, Dh)
+    v = jnp.einsum("bsd,dh->bsh", memory, p["wv"].astype(dt)).reshape(B, Sm, K, Dh)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# decode (single new token against a cache)
+# --------------------------------------------------------------------------
+
+def decode_attention(cfg, p, x, cache_k, cache_v, pos, *, window=0,
+                     windowed_cache=False, positions=None):
+    """One-token self-attention against a KV cache.
+
+    x        [B, 1, D]; pos scalar int32 (current position)
+    cache_k/v [B, Sc, K, Dh]  (Sc = full seq or window size)
+    positions: rope ids override ([B,1], or [3,B,1] m-rope)
+    Returns (out [B,1,D], new_cache_k, new_cache_v).
+    """
+    with jax.named_scope("attn_decode"):
+        dt = x.dtype
+        B = x.shape[0]
+        H, K, Dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+        Sc = cache_k.shape[1]
+        if positions is None:
+            positions = jnp.full((B, 1), pos, jnp.int32)
+        q, k_new, v_new = project_qkv(cfg, p, x, x, positions, positions)
+        slot = jnp.mod(pos, Sc) if windowed_cache else pos
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), slot, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), slot, axis=1)
+        if windowed_cache:
+            # ring buffer: every slot holds a key within the window (or the
+            # slot was just written); all valid once warm.  RoPE was applied
+            # at write time so ordering does not matter.  Cold-start slots
+            # (pos < Sc) are masked by validity.
+            out = attend_naive(cfg, q, cache_k.astype(dt), cache_v.astype(dt),
+                               causal=False, window=None,
+                               kv_valid_len=jnp.minimum(pos + 1, Sc))
+        else:
+            # full cache: slot index == absolute position, so causal + window
+            # masking with q_offset=pos covers validity too (k_idx <= pos).
+            out = attend_naive(cfg, q, cache_k.astype(dt), cache_v.astype(dt),
+                               causal=True, window=window, q_offset=pos)
+        y = jnp.einsum("bsz,zd->bsd", out.reshape(B, 1, -1), p["wo"].astype(dt))
+        return y, cache_k, cache_v

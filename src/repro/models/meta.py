@@ -1,0 +1,103 @@
+"""Parameter metadata: one abstract tree drives init, sharding and dry-run.
+
+Models declare a tree of `ParamMeta` leaves (shape + *logical* axis names).
+From that single tree we derive:
+  * concrete initialized params        (`materialize`)
+  * `jax.ShapeDtypeStruct` stand-ins   (`abstract`)           -- for the dry-run
+  * `PartitionSpec`s via logical->mesh rules (`distributed.sharding`)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamMeta:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]   # logical axis name per dim (None = replicated)
+    init: str = "normal"                 # normal | zeros | ones
+    scale: Optional[float] = None        # stddev override (default: fan-in)
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_meta(x) -> bool:
+    return isinstance(x, ParamMeta)
+
+
+def _leaf_paths(tree, prefix=()):
+    if is_meta(tree):
+        yield prefix, tree
+        return
+    for k in sorted(tree):
+        yield from _leaf_paths(tree[k], prefix + (k,))
+
+
+def tree_map_meta(fn, tree):
+    """Map over ParamMeta leaves, passing (path, meta)."""
+    def rec(node, prefix):
+        if is_meta(node):
+            return fn(prefix, node)
+        return {k: rec(v, prefix + (k,)) for k, v in node.items()}
+    return rec(tree, ())
+
+
+def _fold_path(key: jax.Array, path: Tuple[str, ...]) -> jax.Array:
+    h = 2166136261
+    for part in path:
+        for ch in part.encode():
+            h = ((h ^ ch) * 16777619) & 0xFFFFFFFF
+    return jax.random.fold_in(key, h)
+
+
+def materialize(tree, key: jax.Array, param_dtype: str = "float32"):
+    """Initialize a concrete params pytree from a meta tree."""
+
+    def init_one(path, m: ParamMeta):
+        dtype = jnp.dtype(param_dtype if m.dtype == "float32" else m.dtype)
+        if m.init == "zeros":
+            return jnp.zeros(m.shape, dtype)
+        if m.init == "ones":
+            return jnp.ones(m.shape, dtype)
+        if m.init == "constant":
+            return jnp.full(m.shape, m.scale or 0.0, dtype)
+        if m.init == "a_log":
+            # S4D-real init: A = -(1..N) per state channel
+            n = m.shape[-1]
+            a = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32), m.shape)
+            return jnp.log(a).astype(dtype)
+        fan_in = m.shape[-2] if len(m.shape) >= 2 else m.shape[-1]
+        scale = m.scale if m.scale is not None else fan_in ** -0.5
+        k = _fold_path(key, path)
+        return (jax.random.normal(k, m.shape, jnp.float32) * scale).astype(dtype)
+
+    return tree_map_meta(init_one, tree)
+
+
+def abstract(tree, param_dtype: str = "float32"):
+    """ShapeDtypeStruct tree (no allocation) for .lower()."""
+    def one(_path, m: ParamMeta):
+        dtype = jnp.dtype(param_dtype if m.dtype == "float32" else m.dtype)
+        return jax.ShapeDtypeStruct(m.shape, dtype)
+    return tree_map_meta(one, tree)
+
+
+def logical_axes(tree):
+    """Tree of logical-axis tuples, parallel to the params tree."""
+    return tree_map_meta(lambda _p, m: m.logical, tree)
+
+
+def param_count(tree) -> int:
+    return sum(int(np.prod(m.shape)) for _, m in _leaf_paths(tree))
+
+
+def param_bytes(tree, bytes_per_param: int = 4) -> int:
+    return param_count(tree) * bytes_per_param

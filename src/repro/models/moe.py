@@ -1,0 +1,117 @@
+"""Mixture-of-Experts FFN with top-k routing.
+
+Baseline dispatch is GShard/Switch-style dense one-hot einsums over token
+*groups* (static shapes, GSPMD-friendly; capacity-factor drop policy).
+Groups bound the S_g^2 dispatch-einsum cost.  Expert weights are sharded
+on the expert dim over the `model` mesh axis when E divides it (qwen3),
+else on the ffn dim (mixtral: 8 experts < 16-way axis => expert-TP).
+
+An optimized sort-based / shard_map ragged dispatch lives in
+`repro.distributed.moe_ep` (see EXPERIMENTS.md §Perf) — it removes the
+dispatch-einsum FLOPs and turns the combine all-reduce into all-to-alls.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.autoshard import constrain
+from repro.models.meta import ParamMeta
+
+
+def moe_meta(cfg):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    # expert dim shards over `model` iff divisible (checked in sharding rules)
+    return {
+        "router": ParamMeta((d, e), ("embed", None), scale=0.02),
+        "w_gate": ParamMeta((e, d, f), ("expert", "embed", "moe_mlp")),
+        "w_up": ParamMeta((e, d, f), ("expert", "embed", "moe_mlp")),
+        "w_down": ParamMeta((e, f, d), ("expert", "moe_mlp", "embed")),
+    }
+
+
+def capacity(cfg, group_tokens: int) -> int:
+    c = math.ceil(cfg.top_k * group_tokens * cfg.capacity_factor / cfg.num_experts)
+    return max(1, c)
+
+
+def _group(x: jax.Array, group_size: int) -> Tuple[jax.Array, int]:
+    """[B,S,D] -> [G, Sg, D]."""
+    B, S, D = x.shape
+    sg = min(group_size, S)
+    while S % sg:
+        sg //= 2
+    return x.reshape(B * (S // sg), sg, D), sg
+
+
+def router_dispatch(cfg, probs: jax.Array, cap: int):
+    """GShard top-k dispatch. probs [G,Sg,E] fp32.
+
+    Returns (dispatch [G,Sg,E,C] bool-ish, combine [G,Sg,E,C] fp32, aux_loss).
+    """
+    G, Sg, E = probs.shape
+    gates, idx = jax.lax.top_k(probs, cfg.top_k)                 # [G,Sg,k]
+    # renormalize chosen gates
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    onehot = jax.nn.one_hot(idx, E, dtype=jnp.float32)           # [G,Sg,k,E]
+    # priority order: choice rank first, then token order (GShard policy)
+    flat = onehot.transpose(0, 2, 1, 3).reshape(G, cfg.top_k * Sg, E)
+    pos_flat = jnp.cumsum(flat, axis=1) - flat                   # position within expert
+    pos = pos_flat.reshape(G, cfg.top_k, Sg, E).transpose(0, 2, 1, 3)  # [G,Sg,k,E]
+    keep = (pos < cap) * onehot                                  # drop overflow
+    pos = jnp.minimum(pos, cap - 1).astype(jnp.int32)
+
+    slot = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * keep[..., None]
+    dispatch = slot.sum(axis=2)                                  # [G,Sg,E,C]
+    combine = (slot * gates[..., None, None]).sum(axis=2)        # [G,Sg,E,C]
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    me = probs.mean(axis=(0, 1))                                 # mean router prob
+    ce = onehot.sum(axis=2).mean(axis=(0, 1))                    # fraction routed
+    aux = cfg.num_experts * jnp.sum(me * ce)
+    return dispatch, combine, aux
+
+
+def apply_moe(cfg, p, x: jax.Array, *, group_size: int = 0):
+    """MoE FFN. x [B,S,D] -> ([B,S,D], aux_loss)."""
+    if cfg.moe_dispatch == "sort":
+        from repro.distributed.autoshard import current_mesh
+        mesh = current_mesh()
+        if mesh is not None:
+            sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+            if cfg.num_experts % sizes.get("model", 1) == 0:
+                from repro.distributed.moe_ep import apply_moe_sort
+                with jax.named_scope("moe"):
+                    return apply_moe_sort(cfg, p, x, mesh)
+        # no mesh context / indivisible experts: fall through to einsum
+    with jax.named_scope("moe"):
+        dt = x.dtype
+        tdt = jnp.dtype(cfg.moe_table_dtype)
+        B, S, D = x.shape
+        xg, sg = _group(x, group_size or cfg.moe_group_size)     # [G,Sg,D]
+        with jax.named_scope("router"):
+            logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                                p["router"].astype(jnp.float32))
+            probs = jax.nn.softmax(logits, axis=-1)
+            cap = capacity(cfg, sg)
+            dispatch, combine, aux = router_dispatch(cfg, probs, cap)
+            dispatch = dispatch.astype(tdt)
+            combine = combine.astype(tdt)
+        with jax.named_scope("dispatch"):
+            x_e = jnp.einsum("gsec,gsd->gecd", dispatch.astype(dt), xg)
+            # expert dim onto the model axis (EP); falls back to replicated
+            # when E doesn't divide it (mixtral: experts TP'd on moe_mlp).
+            x_e = constrain(x_e, ("batch", "model", None, None))
+        with jax.named_scope("experts"):
+            g = jnp.einsum("gecd,edf->gecf", x_e, p["w_gate"].astype(dt))
+            u = jnp.einsum("gecd,edf->gecf", x_e, p["w_up"].astype(dt))
+            h = jax.nn.silu(g) * u
+            y_e = jnp.einsum("gecf,efd->gecd", h, p["w_down"].astype(dt))
+        with jax.named_scope("combine"):
+            y = jnp.einsum("gsec,gecd->gsd", combine.astype(dt), y_e)
+            y = constrain(y, ("batch", None, None))
+        return y.reshape(B, S, D), aux

@@ -1,0 +1,3 @@
+from repro.optim.adamw import AdamWConfig, init, update, schedule, global_norm
+
+__all__ = ["AdamWConfig", "init", "update", "schedule", "global_norm"]

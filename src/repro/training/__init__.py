@@ -1,0 +1,3 @@
+from repro.training.watchdog import StragglerWatchdog, StepStats
+
+__all__ = ["StragglerWatchdog", "StepStats"]

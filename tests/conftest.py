@@ -1,0 +1,28 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the real device
+count; multi-device tests spawn subprocesses with their own flags."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 560):
+    """Run a python snippet with N forced host devices; return stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode}):\n{res.stderr[-4000:]}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_subprocess

@@ -1,0 +1,210 @@
+"""Unit + property tests for the tracer core (the paper's contribution)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import attribution, costmodel, hlo_parser, topology
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.topology import MeshSpec, V5E
+
+
+def mk_event(**kw):
+    base = dict(name="ar", kind="all-reduce", async_start=False,
+                operand_bytes=1 << 20, result_bytes=1 << 20, dtype="f32",
+                replica_groups=[[0, 1, 2, 3]], group_size=4, num_groups=1,
+                op_name="", computation="main")
+    base.update(kw)
+    return CollectiveEvent(**base)
+
+
+# --------------------------------------------------------------------------
+# hlo_parser
+# --------------------------------------------------------------------------
+
+SYNTH_HLO = """
+HloModule test
+
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+
+%body (p: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,16] get-tuple-element(%p), index=1
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %ar = f32[8,16] all-reduce(%x), channel_id=1, replica_groups=[2,4]<=[8], use_global_device_ids=true, to_apply=%add, metadata={op_name="jit(f)/while/body/layer/mlp/psum"}
+  ROOT %t = (s32[], f32[8,16]) tuple(%i2, %ar)
+}
+
+%cond (p: (s32[], f32[8,16])) -> pred[] {
+  %p = (s32[], f32[8,16]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+
+ENTRY %main (x: f32[8,16]) -> f32[8,16] {
+  %x = f32[8,16] parameter(0)
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,16]) tuple(%zero, %x)
+  %w = (s32[], f32[8,16]) while(%init), condition=%cond, body=%body
+  %ag = f32[64,16] all-gather(%x), channel_id=2, replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}, metadata={op_name="jit(f)/embed/all_gather"}
+  %cp = f32[8,16] collective-permute(%x), channel_id=3, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}, metadata={op_name="jit(f)/pipeline/ppermute"}
+  ROOT %out = f32[8,16] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_parse_synthetic_hlo():
+    events, stats = hlo_parser.parse_hlo(SYNTH_HLO, 8)
+    by_kind = {e.kind: e for e in events}
+    assert set(by_kind) == {"all-reduce", "all-gather", "collective-permute"}
+
+    ar = by_kind["all-reduce"]
+    assert ar.multiplicity == 12                 # while trip count
+    assert ar.operand_bytes == 8 * 16 * 4
+    assert ar.num_groups == 2 and ar.group_size == 4
+    assert ar.replica_groups[0] == [0, 1, 2, 3]
+    assert "layer/mlp" in ar.op_name
+
+    ag = by_kind["all-gather"]
+    assert ag.multiplicity == 1
+    assert ag.operand_bytes == 64 * 16 * 4       # gathered size convention
+    assert ag.replica_groups == [[0, 1, 2, 3, 4, 5, 6, 7]]
+
+    cp = by_kind["collective-permute"]
+    assert cp.source_target_pairs == [(0, 1), (1, 2), (2, 3), (3, 0)]
+
+
+def test_parse_type_bytes():
+    assert hlo_parser.parse_type_bytes("f32[4,8]{1,0}") == (128, "f32")
+    assert hlo_parser.parse_type_bytes("bf16[10]") == (20, "bf16")
+    b, d = hlo_parser.parse_type_bytes("(f32[4], s32[2])")
+    assert b == 16 + 8 and d == "f32"
+    assert hlo_parser.parse_type_bytes("token[]")[0] == 0
+
+
+@given(g=st.integers(1, 8), s=st.integers(1, 8))
+@settings(max_examples=30, deadline=None)
+def test_iota_groups_partition(g, s):
+    """Iota replica groups exactly partition the device set."""
+    n = g * s
+    groups = topology.resolve_iota_groups(g, s, [n], None)
+    flat = sorted(d for grp in groups for d in grp)
+    assert flat == list(range(n))
+    assert all(len(grp) == s for grp in groups)
+
+
+def test_iota_groups_transposed():
+    # [4,2]<=[2,4]T(1,0): groups are columns of the 2x4 row-major layout
+    groups = topology.resolve_iota_groups(4, 2, [2, 4], [1, 0])
+    assert groups == [[0, 4], [1, 5], [2, 6], [3, 7]]
+
+
+# --------------------------------------------------------------------------
+# topology / link classes
+# --------------------------------------------------------------------------
+
+def test_link_classes():
+    mesh = MeshSpec.multi_pod()   # (2,16,16) pod,data,model
+    # group varying only along model
+    grp = list(range(16))         # devices 0..15 share pod 0, data 0
+    assert topology.varying_axes(mesh, grp) == ("model",)
+    assert topology.link_class(mesh, ("model",)) == "ici.model"
+    assert topology.link_class(mesh, ("pod",)) == "dci.pod"
+    assert topology.link_class(mesh, ("data", "model")) == "ici.mixed(data+model)"
+    assert topology.link_class(mesh, ("pod", "model")).startswith("xpod")
+    assert topology.link_class(mesh, ()) == "local"
+
+
+def test_comm_matrix_conservation():
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    ev = mk_event(replica_groups=[[0, 1, 2, 3], [4, 5, 6, 7]],
+                  group_size=4, num_groups=2)
+    costmodel.annotate_event(ev, mesh, V5E)
+    mat = topology.comm_matrix(mesh, [ev])
+    # ring traffic: every group member sends wire_bytes to its next neighbor
+    assert mat.sum() == pytest.approx(ev.wire_bytes_per_device * 8)
+    assert (mat.diagonal() == 0).all()
+
+
+# --------------------------------------------------------------------------
+# cost model properties
+# --------------------------------------------------------------------------
+
+@given(nbytes=st.integers(1, 1 << 30), n=st.integers(2, 256))
+@settings(max_examples=60, deadline=None)
+def test_wire_bytes_bounds(nbytes, n):
+    for kind in ("all-reduce", "all-gather", "reduce-scatter", "all-to-all"):
+        w = costmodel.wire_bytes_per_device(kind, nbytes, n)
+        assert 0 <= w <= 2 * nbytes
+    assert costmodel.wire_bytes_per_device("all-reduce", nbytes, 1) == 0
+
+
+@given(nbytes=st.integers(1, 1 << 28), n1=st.integers(2, 64))
+@settings(max_examples=40, deadline=None)
+def test_allreduce_monotonic_in_bytes(nbytes, n1):
+    t1 = costmodel.allreduce_time("ring", nbytes, n1, 50e9, 1e-6)
+    t2 = costmodel.allreduce_time("ring", 2 * nbytes, n1, 50e9, 1e-6)
+    assert t2 >= t1
+    # RSAG beats ring on latency for large groups, same bandwidth term
+    t_ring = costmodel.allreduce_time("ring", 1024, 64, 50e9, 1e-6)
+    t_rsag = costmodel.allreduce_time("reduce_scatter_allgather", 1024, 64,
+                                      50e9, 1e-6)
+    assert t_rsag <= t_ring
+
+
+def test_protocol_regimes():
+    mesh = MeshSpec.single_pod()
+    small = mk_event(operand_bytes=1024,
+                     replica_groups=[list(range(16))], group_size=16)
+    big = mk_event(operand_bytes=1 << 28,
+                   replica_groups=[list(range(16))], group_size=16)
+    costmodel.annotate_event(small, mesh, V5E)
+    costmodel.annotate_event(big, mesh, V5E)
+    assert small.protocol == "eager"
+    assert big.protocol == "rndv"
+    assert big.est_time_s > small.est_time_s
+
+
+# --------------------------------------------------------------------------
+# attribution
+# --------------------------------------------------------------------------
+
+def test_split_op_name():
+    scope, prim = attribution.split_op_name(
+        "jit(step)/transpose(jvp(mlp))/while/body/layer/attn/dot_general")
+    assert "layer/attn" in scope and "mlp" in scope
+    assert prim == "dot_general"
+
+
+def test_semantic_classification():
+    assert attribution.classify("layer/attn", "dot_general", "all-gather",
+                                in_backward=False) == "attention"
+    assert attribution.classify("layer/moe/dispatch", "einsum", "all-to-all",
+                                in_backward=False) == "moe_dispatch"
+    # backward DP-only reduction => grad_sync regardless of module scope
+    assert attribution.classify("layer/mlp", "dot_general", "all-reduce",
+                                in_backward=True, axes=("data",)) == "grad_sync"
+    assert attribution.classify("layer/mlp", "dot_general", "all-reduce",
+                                in_backward=True, axes=("model",)) == "ffn"
+
+
+# --------------------------------------------------------------------------
+# detectors
+# --------------------------------------------------------------------------
+
+def test_detect_axis_detour():
+    from repro.core import detect
+    mesh = MeshSpec.single_pod()
+    ev = mk_event(op_name="jit(f)/transpose(jvp(x))/optimizer/psum",
+                  replica_groups=[list(range(256))], group_size=256)
+    costmodel.annotate_event(ev, mesh, V5E)
+    attribution.attribute_event(ev)
+    tr = Trace("t", mesh.shape, mesh.axes, 256, [ev])
+    finds = detect.detect_axis_detours(tr, {"grad_sync": "data"})
+    assert len(finds) == 1 and "model" in str(finds[0])

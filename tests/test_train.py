@@ -1,0 +1,131 @@
+"""Training-loop integration: convergence, bitwise resume, crash recovery,
+straggler watchdog, optimizer correctness."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, smoke_config
+from repro.data import DataConfig, SyntheticTokens
+from repro.launch.presets import StepSettings
+from repro.launch.train import Trainer
+from repro.optim import AdamWConfig, adamw
+from repro.training.watchdog import StragglerWatchdog
+
+CFG = smoke_config(ARCHS["h2o-danube-3-4b"])
+
+
+def make_trainer(tmp, **kw):
+    kw.setdefault("steps", 8)
+    kw.setdefault("batch", 2)
+    kw.setdefault("seq", 64)
+    kw.setdefault("ckpt_every", 4)
+    return Trainer(CFG, ckpt_dir=str(tmp), **kw)
+
+
+def test_loss_decreases(tmp_path):
+    tr = make_trainer(tmp_path, steps=15, ckpt_every=0)
+    log = tr.run()
+    first = np.mean([m["loss"] for m in log[:3]])
+    last = np.mean([m["loss"] for m in log[-3:]])
+    assert last < first - 0.05, (first, last)
+
+
+def test_resume_bitwise(tmp_path):
+    """6 straight steps == 4 steps + restore + 2 steps (same data, params)."""
+    a = make_trainer(tmp_path / "a", steps=6, ckpt_every=10)
+    log_a = a.run()
+
+    b1 = make_trainer(tmp_path / "b", steps=4, ckpt_every=4)
+    b1.run()
+    b2 = make_trainer(tmp_path / "b", steps=6, ckpt_every=4)
+    log_b = b2.run()
+
+    assert len(log_b) == 2   # resumed at step 4
+    la = [m["loss"] for m in log_a[-2:]]
+    lb = [m["loss"] for m in log_b]
+    np.testing.assert_allclose(la, lb, rtol=0, atol=0)   # bitwise
+
+
+def test_crash_injection_and_recovery(tmp_path):
+    """Hard-crash at step 4 (exit 42), restart completes the run."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch",
+            "h2o-danube-3-4b", "--smoke", "--steps", "8", "--batch", "2",
+            "--seq", "64", "--ckpt-dir", str(tmp_path), "--ckpt-every", "2"]
+    res1 = subprocess.run(args + ["--fail-at-step", "4"], env=env,
+                          capture_output=True, text=True, timeout=560)
+    assert res1.returncode == 42
+    assert "injected failure" in res1.stdout
+    res2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                          timeout=560)
+    assert res2.returncode == 0, res2.stderr[-2000:]
+    assert "resumed from checkpoint at step 4" in res2.stdout
+    assert "done" in res2.stdout
+
+
+def test_watchdog_flags_stragglers():
+    wd = StragglerWatchdog(window=50, sigma=4.0)
+    for i in range(30):
+        wd.observe(i, 0.100 + 0.001 * (i % 3))
+    st_ = wd.observe(31, 0.5)      # 5x slower
+    assert st_.flagged
+    st2 = wd.observe(32, 0.101)
+    assert not st2.flagged
+    assert wd.hang_deadline_s() >= 0.5
+
+
+def test_adamw_matches_reference():
+    """One AdamW step against a hand-computed reference."""
+    cfg = AdamWConfig(lr=0.1, beta1=0.9, beta2=0.99, eps=1e-8,
+                      weight_decay=0.0, clip_norm=0.0, warmup_steps=0,
+                      total_steps=10**9, min_lr_ratio=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    state = adamw.init(cfg, p)
+    new_p, new_state, _ = adamw.update(cfg, g, state, p)
+    m = 0.1 * 0.5
+    v = 0.01 * 0.25
+    mhat = m / (1 - 0.9)
+    vhat = v / (1 - 0.99)
+    step = mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(np.asarray(new_p["w"]),
+                               np.asarray(p["w"]) - 0.1 * step, rtol=1e-5)
+
+
+@given(step=st.integers(0, 10_000))
+@settings(max_examples=30, deadline=None)
+def test_schedule_bounds(step):
+    cfg = AdamWConfig(lr=3e-4, warmup_steps=100, total_steps=10_000)
+    lr = float(adamw.schedule(cfg, jnp.asarray(step)))
+    assert 0.0 <= lr <= cfg.lr * (1 + 1e-6)
+    if step >= cfg.total_steps:
+        assert lr <= cfg.lr * cfg.min_lr_ratio * (1 + 1e-4) + 1e-9
+
+
+def test_data_determinism_and_seek():
+    data = SyntheticTokens(CFG, DataConfig(4, 32, seed=7))
+    b1 = data.batch_at(10)
+    b2 = data.batch_at(10)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    b3 = data.batch_at(11)
+    assert not np.array_equal(b1["tokens"], b3["tokens"])
+    it = data.iter_from(10)
+    np.testing.assert_array_equal(next(it)["tokens"], b1["tokens"])
+    assert b1["tokens"].min() >= 0
+    assert b1["tokens"].max() < CFG.vocab_size
+
+
+def test_grad_compression_still_trains(tmp_path):
+    tr = Trainer(CFG, steps=6, batch=2, seq=64, ckpt_dir=None, ckpt_every=0,
+                 settings=StepSettings(accum=1, remat="dots",
+                                       grad_compression="bf16"))
+    log = tr.run()
+    assert np.isfinite([m["loss"] for m in log]).all()
