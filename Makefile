@@ -1,0 +1,23 @@
+# Development entry points.  The tier-1 gate is `make test`.
+
+PY ?= python
+
+.PHONY: test test-fast bench session-demo
+
+# tier-1: all 12+ test modules must collect and pass (hypothesis optional —
+# tests/_hypothesis_compat.py degrades @given to fixed examples without it)
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q
+
+# analysis-layer tests only (no jax compilation; seconds, not minutes)
+test-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m pytest -x -q \
+		tests/test_tracer.py tests/test_detect.py tests/test_report.py \
+		tests/test_session.py tests/test_pipeline.py
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m benchmarks.run
+
+# end-to-end multi-trace session workflow (build/save/load/compare)
+session-demo:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PY) -m repro.core.session demo

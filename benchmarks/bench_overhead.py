@@ -4,10 +4,16 @@ ucTrace interposes at runtime (1.3x-25x slowdown, GB-scale logs).  Our trace
 is compile-time: the overhead is pure offline analysis (HLO parse + assembly)
 on top of an unavoidable lower+compile, with zero runtime cost.  We measure
 lower/compile/parse wall time and trace size for a dense and a MoE step.
+
+Also measures the *analysis* hot path at the paper's experiment scale: a
+100k-event synthetic trace aggregated by (kind x link) + semantic, columnar
+(`TraceStore` bincount) vs the per-event Python reference — the columnar
+path must be >= 5x faster.
 """
 from __future__ import annotations
 
 import json
+import time
 
 from _util import run_worker
 
@@ -67,9 +73,55 @@ print("JSON" + json.dumps(rows))
 """
 
 
+def _agg_100k_case(n_sites: int = 100_000, iters: int = 3):
+    """Columnar vs per-event aggregation on a 100k-event synthetic trace."""
+    from repro.core.synth import synthetic_trace
+    from repro.core.topology import MeshSpec
+
+    tr = synthetic_trace("agg100k", MeshSpec((2, 4), ("data", "model")),
+                         n_sites=n_sites, seed=0)
+
+    def legacy():
+        a = tr.by(lambda e: f"{e.kind}|{e.link_class}")
+        b = tr.by(lambda e: e.semantic or "other")
+        return a, b
+
+    def columnar():
+        return tr.by_kind_and_link(), tr.by_semantic()
+
+    t0 = time.perf_counter()
+    build = tr.store                      # one-time column build, timed apart
+    t_build = (time.perf_counter() - t0) * 1e6
+    assert build.n == n_sites
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        ref = legacy()
+    t_legacy = (time.perf_counter() - t0) / iters * 1e6
+
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        col = columnar()
+    t_col = (time.perf_counter() - t0) / iters * 1e6
+
+    # equivalence guard: same keys, same byte totals
+    match = all(
+        set(r) == set(c)
+        and all(abs(r[k]["bytes"] - c[k]["bytes"]) < 1e-6 for k in r)
+        for r, c in zip(ref, col))
+    speedup = t_legacy / max(t_col, 1e-9)
+    return [
+        (f"overhead/agg{n_sites//1000}k/per_event", t_legacy, "baseline-cost"),
+        (f"overhead/agg{n_sites//1000}k/columnar", t_col,
+         f"speedup={speedup:.1f}x|target>=5x|sites={n_sites}|"
+         f"store_build_us={t_build:.0f}|equivalent={match}"),
+    ]
+
+
 def run():
+    rows = _agg_100k_case()
     out = run_worker(WORKER, devices=8)
     for line in out.splitlines():
         if line.startswith("JSON"):
-            return [tuple(r) for r in json.loads(line[4:])]
+            return rows + [tuple(r) for r in json.loads(line[4:])]
     raise RuntimeError("no JSON output from worker")

@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Tier-1 test gate: run from the repo root.  Extra args pass through to
+# pytest (e.g. `scripts/test.sh tests/test_session.py -k roundtrip`).
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"

@@ -3,12 +3,22 @@ JAX/TPU — HLO-parsed "UCT" events, mesh/link attribution, completion cost
 model, scope/semantic ("UCP"/"MPI") attribution, detectors and reports.
 """
 from repro.core.events import CollectiveEvent, Trace
+from repro.core.store import TraceStore
 from repro.core.topology import Hardware, MeshSpec, V5E
 from repro.core.tracer import trace_compiled, trace_from_hlo, trace_step
 from repro.core.roofline import RooflineReport, roofline
 
 __all__ = [
-    "CollectiveEvent", "Trace", "Hardware", "MeshSpec", "V5E",
+    "CollectiveEvent", "Trace", "TraceStore", "TraceSession",
+    "Hardware", "MeshSpec", "V5E",
     "trace_compiled", "trace_from_hlo", "trace_step",
     "RooflineReport", "roofline",
 ]
+
+
+def __getattr__(name):
+    # lazy so `python -m repro.core.session` doesn't import the module twice
+    if name == "TraceSession":
+        from repro.core.session import TraceSession
+        return TraceSession
+    raise AttributeError(name)

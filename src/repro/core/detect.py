@@ -4,12 +4,18 @@ On an IB/GPU cluster the classic silent misconfiguration is traffic taking a
 host detour because of process placement.  On a TPU mesh the analogue is
 traffic taking an *axis* detour because of bad PartitionSpecs.  Each detector
 inspects the assembled trace and returns human-actionable findings.
+
+Detectors scan the columnar `TraceStore`: candidate filtering is a numpy
+mask over interned code columns, and only the (few) survivors are
+materialized as rows for message construction — on 100k-event traces the
+scans no longer walk Python objects.
 """
 from __future__ import annotations
 
-from collections import defaultdict
 from dataclasses import dataclass
 from typing import Dict, List
+
+import numpy as np
 
 from repro.core.events import Trace
 from repro.core.topology import Hardware, V5E
@@ -31,25 +37,34 @@ def detect_redundant_gathers(trace: Trace) -> List[Finding]:
 
     (ucTrace: repeated identical UCT transfers within one MPI call.)
     """
-    seen: Dict[tuple, int] = defaultdict(int)
-    bytes_by_key: Dict[tuple, float] = defaultdict(float)
-    for e in trace.events:
-        if e.kind not in ("all-gather", "all-reduce"):
-            continue
-        key = (e.kind, e.operand_bytes, e.link_class, e.scope, e.computation)
-        seen[key] += 1
-        bytes_by_key[key] = e.operand_bytes * e.multiplicity
+    s = trace.store
+    cand = s.kind.mask_of("all-gather", "all-reduce") \
+        & (s.operand_bytes > (1 << 20))
+    idx = np.flatnonzero(cand)
+    if len(idx) < 2:
+        return []
+    # composite (kind, bytes, link, scope, computation) key per candidate
+    key = np.zeros(len(idx), dtype=np.int64)
+    for cat in (s.kind, s.link_class, s.scope, s.computation):
+        key = key * len(cat.vocab) + cat.codes[idx]
+    _, uniq_bytes = np.unique(s.operand_bytes[idx], return_inverse=True)
+    key = key * (uniq_bytes.max() + 1) + uniq_bytes
+    uniq, inv, counts = np.unique(key, return_inverse=True, return_counts=True)
     out = []
-    for key, count in seen.items():
-        if count > 1 and key[1] > (1 << 20):
-            kind, nbytes, link, scope, comp = key
-            wasted = (count - 1) * bytes_by_key[key]
-            out.append(Finding(
-                "redundant_collective", "warn",
-                f"{count}x identical {kind} of {nbytes/1e6:.1f} MB on {link} "
-                f"(scope '{scope or '-'}', comp '{comp}') — candidates for CSE "
-                f"or re-materialization of the gathered value",
-                wasted_bytes=wasted))
+    for g in np.flatnonzero(counts > 1):
+        members = idx[inv == g]
+        last = int(members[-1])
+        count = int(counts[g])
+        nbytes = int(s.operand_bytes[last])
+        wasted = (count - 1) * nbytes * int(s.multiplicity[last])
+        out.append(Finding(
+            "redundant_collective", "warn",
+            f"{count}x identical {s.kind.value(last)} of {nbytes/1e6:.1f} MB "
+            f"on {s.link_class.value(last)} "
+            f"(scope '{s.scope.value(last) or '-'}', "
+            f"comp '{s.computation.value(last)}') — candidates for CSE "
+            f"or re-materialization of the gathered value",
+            wasted_bytes=wasted))
     return out
 
 
@@ -63,21 +78,24 @@ def detect_axis_detours(trace: Trace, expected: Dict[str, str],
     of NUMA-misbound traffic routed through remote NICs.  Sub-MB payloads
     (scalar metric reductions, grad-norm psums) are exempt.
     """
+    s = trace.store
+    cand = s.semantic.mask_of(*expected) \
+        & (s.operand_bytes * s.multiplicity >= min_bytes)
     out = []
-    for e in trace.events:
-        want = expected.get(e.semantic)
-        if want is None or not e.axes:
+    for i in np.flatnonzero(cand):
+        axes = s.axes[i]
+        if not axes:
             continue
-        if e.operand_bytes * e.multiplicity < min_bytes:
-            continue
-        extra = [a for a in e.axes if a != want]
-        if extra:
+        want = expected[s.semantic.value(i)]
+        if any(a != want for a in axes):
+            nbytes = int(s.operand_bytes[i])
             out.append(Finding(
                 "axis_detour", "warn",
-                f"{e.semantic} {e.kind} ({e.operand_bytes/1e6:.1f} MB) spans "
-                f"axes {e.axes}, expected only '{want}' — check the "
-                f"PartitionSpec feeding scope '{e.scope or '-'}'",
-                wasted_bytes=e.operand_bytes * e.multiplicity))
+                f"{s.semantic.value(i)} {s.kind.value(i)} "
+                f"({nbytes/1e6:.1f} MB) spans "
+                f"axes {axes}, expected only '{want}' — check the "
+                f"PartitionSpec feeding scope '{s.scope.value(i) or '-'}'",
+                wasted_bytes=nbytes * int(s.multiplicity[i])))
     return out
 
 
@@ -87,10 +105,11 @@ def detect_eager_floods(trace: Trace, hw: Hardware = V5E,
 
     (ucTrace Fig 4/6: am_short floods where rendezvous would batch.)
     """
-    eager = [e for e in trace.events if e.protocol == "eager"]
-    n = sum(e.multiplicity for e in eager)
+    s = trace.store
+    mask = s.protocol.mask_of("eager")
+    n = int(s.multiplicity[mask].sum())
     if n >= min_count:
-        lat = sum(e.est_time_s * e.multiplicity for e in eager)
+        lat = float((s.est_time_s[mask] * s.weights[mask]).sum())
         return [Finding(
             "eager_flood", "info",
             f"{n} latency-bound collectives/step (< {hw.rndv_threshold/1024:.0f} KiB "
@@ -113,14 +132,15 @@ def detect_layout_thrash(trace: Trace, threshold_bytes: float = 1 << 30) -> List
 
 def detect_cross_pod_bulk(trace: Trace) -> List[Finding]:
     """Bulk traffic on the slow inter-pod DCI that could stay intra-pod."""
+    s = trace.store
+    mask = s.link_class.mask_prefix(("dci", "xpod"))
+    total = float((s.wire_total[mask] * s.weights[mask]).sum())
     out = []
-    dci = [e for e in trace.events if e.link_class.startswith(("dci", "xpod"))]
-    total = sum(e.total_wire_bytes * e.multiplicity for e in dci)
     if total > 1 << 30:
         out.append(Finding(
             "cross_pod_bulk", "warn",
             f"{total/1e9:.2f} GB/step crosses the inter-pod DCI "
-            f"({len(dci)} collectives) — hierarchical reduction "
+            f"({int(mask.sum())} collectives) — hierarchical reduction "
             f"(in-pod reduce-scatter, cross-pod exchange of 1/pod_size) or "
             f"gradient compression recommended"))
     return out

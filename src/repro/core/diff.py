@@ -5,11 +5,15 @@ OMPI vs MPICH).  `diff_traces` aligns two traces by (kind, link class,
 semantic) and reports byte/count/time deltas, new/vanished traffic classes,
 and a verdict line per class — so "what did my change do to communication?"
 is one function call on two compiled artifacts.
+
+`diff_n` generalizes the alignment to N traces (the paper's "Allreduce
+across MPI libraries / UCX settings" shape): one row per traffic class,
+one column per trace, rendered by `report.session_table`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from repro.core.events import Trace
 
@@ -48,7 +52,7 @@ def _agg(trace: Trace, by: str) -> Dict[str, Dict[str, float]]:
         return trace.by_kind_and_link()
     if by == "semantic":
         return trace.by_semantic()
-    return trace.by(lambda e: f"{e.semantic}|{e.kind}|{e.link_class}")
+    return trace.store.by_sem_kind_link()
 
 
 def diff_traces(a: Trace, b: Trace, by: str = "kind_link") -> List[DiffRow]:
@@ -80,3 +84,50 @@ def render_diff(a: Trace, b: Trace, by: str = "kind_link") -> str:
                  f"{ta*1e3:8.2f} {tb*1e3:8.2f}  "
                  f"{'%.2fx' % (tb/ta) if ta else 'n/a'}")
     return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# n-way alignment (session comparisons)
+# --------------------------------------------------------------------------
+
+@dataclass
+class NWayRow:
+    """One traffic class aligned across N traces."""
+
+    key: str
+    bytes_: List[float]
+    counts: List[float]
+    times: List[float]
+
+    @property
+    def max_bytes(self) -> float:
+        return max(self.bytes_)
+
+    @property
+    def spread(self) -> float:
+        """max/min byte ratio over traces where the class exists (>=1)."""
+        present = [b for b in self.bytes_ if b > 0]
+        if not present:
+            return 1.0
+        return max(present) / min(present)
+
+    def verdict(self, threshold: float = 0.1) -> str:
+        present = sum(1 for b in self.bytes_ if b > 0)
+        if present < len(self.bytes_):
+            return f"in {present}/{len(self.bytes_)}"
+        r = self.spread
+        return f"varies {r:.2f}x" if r > 1 + threshold else "~same"
+
+
+def diff_n(traces: Sequence[Trace], by: str = "kind_link") -> List[NWayRow]:
+    """Align N traces by traffic class; rows sorted by peak bytes."""
+    aggs = [_agg(t, by) for t in traces]
+    keys = sorted(set().union(*aggs)) if aggs else []
+    zero = {"bytes": 0.0, "count": 0.0, "time_s": 0.0}
+    rows = [NWayRow(key=k,
+                    bytes_=[a.get(k, zero)["bytes"] for a in aggs],
+                    counts=[a.get(k, zero)["count"] for a in aggs],
+                    times=[a.get(k, zero)["time_s"] for a in aggs])
+            for k in keys]
+    rows.sort(key=lambda r: -r.max_bytes)
+    return rows

@@ -69,34 +69,97 @@ class HloOpStats:
     flops_by_scope: Dict[str, float] = field(default_factory=dict)
 
 
-@dataclass
 class Trace:
-    """A complete multi-layer communication trace of one compiled step."""
+    """A complete multi-layer communication trace of one compiled step.
 
-    label: str
-    mesh_shape: Tuple[int, ...]
-    mesh_axes: Tuple[str, ...]
-    num_devices: int
-    events: List[CollectiveEvent] = field(default_factory=list)
-    op_stats: HloOpStats = field(default_factory=HloOpStats)
+    Events are accepted as a list of `CollectiveEvent` (the parser/cost-model
+    construction format) but aggregation runs on a lazily-built columnar
+    `TraceStore` (see store.py): named rollups and totals are `np.bincount`
+    over interned codes, not Python loops.  `events` stays the row view —
+    a trace loaded from a saved store materializes rows only on first
+    access.  Staleness detection is by length only: reassigning `events`
+    or changing the list's length invalidates the store automatically;
+    any same-length mutation (replacing a list item, editing an event's
+    fields in place) after an aggregate was computed requires an explicit
+    `invalidate()`.
+    """
 
-    # compiled-artifact numbers (cost_analysis / memory_analysis)
-    hlo_flops: float = 0.0
-    hlo_bytes: float = 0.0
-    per_device_memory_bytes: float = 0.0
-    argument_bytes: float = 0.0
-    output_bytes: float = 0.0
+    def __init__(self, label: str, mesh_shape: Tuple[int, ...],
+                 mesh_axes: Tuple[str, ...], num_devices: int,
+                 events: Optional[List[CollectiveEvent]] = None,
+                 op_stats: Optional[HloOpStats] = None, *,
+                 store=None,
+                 hlo_flops: float = 0.0, hlo_bytes: float = 0.0,
+                 per_device_memory_bytes: float = 0.0,
+                 argument_bytes: float = 0.0, output_bytes: float = 0.0):
+        self.label = label
+        self.mesh_shape = tuple(mesh_shape)
+        self.mesh_axes = tuple(mesh_axes)
+        self.num_devices = num_devices
+        self.op_stats = op_stats if op_stats is not None else HloOpStats()
+        # compiled-artifact numbers (cost_analysis / memory_analysis)
+        self.hlo_flops = hlo_flops
+        self.hlo_bytes = hlo_bytes
+        self.per_device_memory_bytes = per_device_memory_bytes
+        self.argument_bytes = argument_bytes
+        self.output_bytes = output_bytes
+        if store is not None and events is None:
+            self._events: Optional[List[CollectiveEvent]] = None
+        else:
+            self._events = list(events) if events is not None else []
+        self._store = store
 
-    # ---- aggregate views ---------------------------------------------------
+    def __repr__(self) -> str:
+        n = len(self._events) if self._events is not None else self._store.n
+        return (f"Trace(label={self.label!r}, mesh_shape={self.mesh_shape}, "
+                f"mesh_axes={self.mesh_axes}, sites={n})")
+
+    # ---- columnar backing --------------------------------------------------
+
+    @property
+    def events(self) -> List[CollectiveEvent]:
+        if self._events is None:          # loaded from a store: rows on demand
+            self._events = self._store.rows()
+        return self._events
+
+    @events.setter
+    def events(self, value: List[CollectiveEvent]) -> None:
+        self._events = list(value)
+        self._store = None
+
+    @property
+    def store(self):
+        """The columnar view; (re)built when the event list changed length."""
+        from repro.core.store import TraceStore
+        if self._store is None or (self._events is not None
+                                   and self._store.n != len(self._events)):
+            self._store = TraceStore.from_events(self._events or [])
+        return self._store
+
+    def invalidate(self) -> None:
+        """Drop the cached columns after a same-length event mutation
+        (item replacement or in-place field edit) — length changes are
+        detected automatically, these are not."""
+        if self._events is None:
+            self._events = self._store.rows()
+        self._store = None
+
+    @classmethod
+    def from_store(cls, label: str, mesh_shape: Tuple[int, ...],
+                   mesh_axes: Tuple[str, ...], num_devices: int, store,
+                   **kw) -> "Trace":
+        return cls(label, mesh_shape, mesh_axes, num_devices, store=store, **kw)
+
+    # ---- aggregate views (vectorized over the store) -----------------------
     def total_collective_bytes(self) -> float:
         """Sum of operand sizes x multiplicity (roofline definition)."""
-        return float(sum(e.operand_bytes * e.multiplicity for e in self.events))
+        return self.store.total_collective_bytes()
 
     def total_wire_bytes(self) -> float:
-        return float(sum(e.total_wire_bytes * e.multiplicity for e in self.events))
+        return self.store.total_wire_bytes()
 
     def total_est_time_s(self) -> float:
-        return float(sum(e.est_time_s * e.multiplicity for e in self.events))
+        return self.store.total_est_time_s()
 
     def overlapped_est_time_s(self) -> float:
         """Lower bound on collective time with perfect cross-link overlap.
@@ -106,14 +169,15 @@ class Trace:
         concurrently: the bound is the max per-class serialized time, not
         the sum.  Together with total_est_time_s() this brackets reality.
         """
-        per_class: Dict[str, float] = {}
-        for e in self.events:
-            per_class[e.link_class] = per_class.get(e.link_class, 0.0) \
-                + e.est_time_s * e.multiplicity
-        return max(per_class.values()) if per_class else 0.0
+        return self.store.overlapped_est_time_s()
 
     def by(self, key_fn) -> Dict[str, Dict[str, float]]:
-        """Aggregate {key: {bytes, wire_bytes, count, time_s}}."""
+        """Aggregate {key: {bytes, wire_bytes, count, time_s}}.
+
+        Reference per-event path for *arbitrary* key functions (and the
+        baseline the columnar rollups are equivalence-tested against).
+        The named rollups below run columnar instead.
+        """
         agg: Dict[str, Dict[str, float]] = {}
         for e in self.events:
             k = key_fn(e)
@@ -126,7 +190,7 @@ class Trace:
         return agg
 
     def by_kind_and_link(self):
-        return self.by(lambda e: f"{e.kind}|{e.link_class}")
+        return self.store.by_kind_and_link()
 
     def by_semantic(self):
-        return self.by(lambda e: e.semantic or "other")
+        return self.store.by_semantic()

@@ -61,29 +61,70 @@ def ascii_matrix(mat: np.ndarray, labels: Optional[List[str]] = None,
 
 def timeline(trace: Trace, top: int = 30) -> str:
     """Modeled serialized schedule of the heaviest collectives (Fig 3a)."""
-    evs = sorted(trace.events, key=lambda e: -(e.est_time_s * e.multiplicity))
+    s = trace.store
+    order = np.argsort(-(s.est_time_s * s.weights), kind="stable")[:top]
     t = 0.0
     lines = [f"{'t_start_us':>10s} {'dur_us':>9s} {'x':>5s} {'kind':18s} "
              f"{'link':16s} {'semantic':14s} scope"]
-    for e in evs[:top]:
-        dur = e.est_time_s * 1e6
-        lines.append(f"{t*1e6:10.1f} {dur:9.2f} {e.multiplicity:5d} "
-                     f"{e.kind:18s} {e.link_class:16s} {e.semantic:14s} "
-                     f"{e.scope[:48]}")
-        t += e.est_time_s * e.multiplicity
+    for i in order:
+        dur = s.est_time_s[i] * 1e6
+        lines.append(f"{t*1e6:10.1f} {dur:9.2f} {int(s.multiplicity[i]):5d} "
+                     f"{s.kind.value(i):18s} {s.link_class.value(i):16s} "
+                     f"{s.semantic.value(i):14s} "
+                     f"{s.scope.value(i)[:48]}")
+        t += s.est_time_s[i] * s.multiplicity[i]
     return "\n".join(lines)
 
 
 def summary(trace: Trace) -> str:
-    n_ev = sum(e.multiplicity for e in trace.events)
+    n_ev = int(trace.store.multiplicity.sum())
     return (
         f"trace '{trace.label}': mesh {trace.mesh_shape} axes {trace.mesh_axes}\n"
-        f"  collectives/step: {n_ev} ({len(trace.events)} sites)\n"
+        f"  collectives/step: {n_ev} ({trace.store.n} sites)\n"
         f"  collective bytes (operand conv): {trace.total_collective_bytes()/1e9:.3f} GB/device\n"
         f"  wire bytes: {trace.total_wire_bytes()/1e9:.3f} GB total\n"
         f"  modeled collective time: {trace.total_est_time_s()*1e3:.3f} ms (serialized)\n"
         f"  HLO flops/device: {trace.hlo_flops/1e12:.3f} T, bytes: {trace.hlo_bytes/1e9:.2f} GB\n"
         f"  per-device memory: {trace.per_device_memory_bytes/1e9:.2f} GB")
+
+
+# --------------------------------------------------------------------------
+# n-way session comparison (the "Allreduce across MPI libraries" table)
+# --------------------------------------------------------------------------
+
+def session_table(traces, by: str = "kind_link", metric: str = "bytes",
+                  top: int = 24) -> str:
+    """N-way comparison: one row per traffic class, one column per trace.
+
+    `traces` is any sequence of Trace (a TraceSession iterates as one).
+    `metric` selects the cell value: bytes (GB), time (ms), or count.
+    The paper's cross-run experiment shape (UCX settings / MPI libraries /
+    NUMA bindings) as a single table — `diff.render_diff` stays the
+    two-column deep-dive.
+    """
+    from repro.core.diff import diff_n
+    traces = list(traces)
+    if not traces:
+        return "(empty session)"
+    rows = diff_n(traces, by)
+    labels = [t.label for t in traces]
+    scale, unit = {"bytes": (1e-9, "GB"), "time": (1e3, "ms"),
+                   "count": (1.0, "x")}[metric]
+    width = max(10, max(len(l) for l in labels) + 1)
+    head = f"{'key (' + unit + ')':42s} " + \
+        " ".join(f"{l[:width-1]:>{width}s}" for l in labels) + "  verdict"
+    lines = [f"session comparison ({len(traces)} traces, by {by})", head]
+    for r in rows[:top]:
+        vals = {"bytes": r.bytes_, "time": r.times, "count": r.counts}[metric]
+        cells = " ".join(f"{v*scale:{width}.3f}" for v in vals)
+        lines.append(f"{r.key:42s} {cells}  {r.verdict()}")
+    if len(rows) > top:
+        lines.append(f"... ({len(rows) - top} more classes)")
+    totals = [t.total_est_time_s() * 1e3 for t in traces]
+    lines.append(f"{'TOTAL modeled collective ms':42s} " +
+                 " ".join(f"{v:{width}.3f}" for v in totals) +
+                 ("  best=" + labels[int(np.argmin(totals))] if totals else ""))
+    return "\n".join(lines)
 
 
 # --------------------------------------------------------------------------
@@ -134,7 +175,7 @@ def to_html(trace: Trace, mesh: MeshSpec) -> str:
     parts.append("<pre>" + html_mod.escape(semantic_table(trace)) + "</pre>")
 
     # comm matrix heatmaps per axis
-    mat = comm_matrix(mesh, trace.events)
+    mat = comm_matrix(mesh, trace)
     for axis in mesh.axes:
         red = reduce_matrix(mat, mesh, axis)
         peak = red.max() or 1.0

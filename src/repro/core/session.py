@@ -1,0 +1,281 @@
+"""TraceSession — named multi-trace collections with save/load + comparison.
+
+The paper's headline experiments are *comparisons across runs*: the same
+Allreduce workload under different MPI libraries, UCX settings, and NUMA
+bindings.  A `TraceSession` makes that shape first-class: collect traces
+from several configurations, persist them as one artifact (compact JSON or
+compressed npz of the columnar stores), and render n-way comparison views.
+
+CLI:
+    python -m repro.core.session demo  [--out PATH] [--format json|npz]
+    python -m repro.core.session show  PATH
+    python -m repro.core.session table PATH [--by kind_link|semantic] \\
+                                            [--metric bytes|time|count]
+    python -m repro.core.session diff  PATH LABEL_A LABEL_B
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import sys
+from typing import Dict, Iterator, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.events import HloOpStats, Trace
+from repro.core.store import TraceStore
+
+_TRACE_SCALARS = ("hlo_flops", "hlo_bytes", "per_device_memory_bytes",
+                  "argument_bytes", "output_bytes")
+
+
+# --------------------------------------------------------------------------
+# Trace <-> dict (rides on the columnar store serialization)
+# --------------------------------------------------------------------------
+
+def trace_to_dict(trace: Trace) -> Dict[str, object]:
+    return {**_trace_meta(trace), "store": trace.store.to_dict()}
+
+
+def trace_from_dict(d: Dict[str, object]) -> Trace:
+    return _trace_from_meta(d, TraceStore.from_dict(d["store"]))
+
+
+def _trace_meta(trace: Trace) -> Dict[str, object]:
+    return {
+        "label": trace.label,
+        "mesh_shape": list(trace.mesh_shape),
+        "mesh_axes": list(trace.mesh_axes),
+        "num_devices": trace.num_devices,
+        "scalars": {k: getattr(trace, k) for k in _TRACE_SCALARS},
+        "op_stats": dataclasses.asdict(trace.op_stats),
+    }
+
+
+def _trace_from_meta(meta: Dict[str, object], store: TraceStore) -> Trace:
+    return Trace.from_store(
+        meta["label"], tuple(meta["mesh_shape"]), tuple(meta["mesh_axes"]),
+        int(meta["num_devices"]), store,
+        op_stats=HloOpStats(**meta["op_stats"]),
+        **{k: float(v) for k, v in meta["scalars"].items()})
+
+
+# --------------------------------------------------------------------------
+# the session
+# --------------------------------------------------------------------------
+
+class TraceSession:
+    """An ordered, label-addressed collection of traces."""
+
+    def __init__(self, name: str, traces: Optional[Sequence[Trace]] = None):
+        self.name = name
+        self._traces: List[Trace] = []
+        for t in traces or ():
+            self.add(t)
+
+    # -- collection interface -----------------------------------------------
+
+    def add(self, trace: Trace) -> Trace:
+        if trace.label in self.labels():
+            raise ValueError(f"duplicate trace label {trace.label!r} "
+                             f"in session {self.name!r}")
+        self._traces.append(trace)
+        return trace
+
+    def labels(self) -> List[str]:
+        return [t.label for t in self._traces]
+
+    def get(self, label: str) -> Trace:
+        for t in self._traces:
+            if t.label == label:
+                return t
+        raise KeyError(f"no trace {label!r} in session {self.name!r} "
+                       f"(have {self.labels()})")
+
+    def __len__(self) -> int:
+        return len(self._traces)
+
+    def __iter__(self) -> Iterator[Trace]:
+        return iter(self._traces)
+
+    # -- aggregate views -----------------------------------------------------
+
+    def aggregate(self, by: str = "kind_link") -> Dict[str, Dict[str, Dict[str, float]]]:
+        """{trace label: {traffic class: {bytes, wire_bytes, count, time_s}}}."""
+        fn = {"kind_link": lambda t: t.by_kind_and_link(),
+              "semantic": lambda t: t.by_semantic()}[by]
+        return {t.label: fn(t) for t in self._traces}
+
+    def totals(self) -> List[Dict[str, float]]:
+        """Per-trace one-line summaries (the session overview rows)."""
+        return [{
+            "label": t.label,
+            "sites": t.store.n,
+            "collectives_per_step": float(t.store.multiplicity.sum()),
+            "collective_gb": t.total_collective_bytes() / 1e9,
+            "wire_gb": t.total_wire_bytes() / 1e9,
+            "est_ms": t.total_est_time_s() * 1e3,
+            "overlapped_ms": t.overlapped_est_time_s() * 1e3,
+        } for t in self._traces]
+
+    def table(self, by: str = "kind_link", metric: str = "bytes") -> str:
+        from repro.core.report import session_table
+        return session_table(self._traces, by=by, metric=metric)
+
+    def diff(self, label_a: str, label_b: str, by: str = "kind_link") -> str:
+        from repro.core.diff import render_diff
+        return render_diff(self.get(label_a), self.get(label_b), by=by)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Persist to `path` (.json or .npz, by extension; default .json)."""
+        if path.endswith(".npz"):
+            arrs: Dict[str, np.ndarray] = {}
+            for i, t in enumerate(self._traces):
+                arrs.update(t.store.npz_arrays(prefix=f"t{i}_"))
+            arrs["session"] = np.array(json.dumps({
+                "name": self.name,
+                "traces": [_trace_meta(t) for t in self._traces]}))
+            with open(path, "wb") as f:
+                np.savez_compressed(f, **arrs)
+            return path
+        if not path.endswith(".json"):
+            path += ".json"
+        payload = {"name": self.name,
+                   "traces": [trace_to_dict(t) for t in self._traces]}
+        with open(path, "w") as f:
+            json.dump(payload, f, separators=(",", ":"))
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "TraceSession":
+        if path.endswith(".npz"):
+            with np.load(path) as arrs:
+                side = json.loads(str(arrs["session"]))
+                traces = [
+                    _trace_from_meta(
+                        meta, TraceStore.from_npz_arrays(arrs, prefix=f"t{i}_"))
+                    for i, meta in enumerate(side["traces"])]
+            return cls(side["name"], traces)
+        with open(path) as f:
+            payload = json.load(f)
+        return cls(payload["name"],
+                   [trace_from_dict(d) for d in payload["traces"]])
+
+
+# --------------------------------------------------------------------------
+# demo session: the "Allreduce across MPI libraries / UCX settings" shape
+# --------------------------------------------------------------------------
+
+def demo_session(n_sites: int = 2000, seed: int = 0) -> TraceSession:
+    """Three mesh/config variants of the same synthetic workload.
+
+    The knobs mirror the paper's comparison dimensions: mesh layout
+    (NUMA-binding analogue), rendezvous threshold (UCX setting analogue),
+    and axis bias (library algorithm-choice analogue).
+    """
+    import dataclasses as dc
+
+    from repro.core.synth import synthetic_trace
+    from repro.core.topology import MeshSpec, V5E
+
+    sess = TraceSession("demo-allreduce-sweep")
+    sess.add(synthetic_trace(
+        "dp8-baseline", MeshSpec((8,), ("data",)), V5E,
+        n_sites=n_sites, seed=seed))
+    sess.add(synthetic_trace(
+        "dp2xtp4", MeshSpec((2, 4), ("data", "model")), V5E,
+        n_sites=n_sites, seed=seed, axis_weights=(2.0, 1.0)))
+    sess.add(synthetic_trace(
+        "pod2xdp4-rndv64k", MeshSpec((2, 4), ("pod", "data")),
+        dc.replace(V5E, rndv_threshold=1 << 16),
+        n_sites=n_sites, seed=seed, axis_weights=(1.0, 3.0)))
+    return sess
+
+
+def _main(argv: Optional[Sequence[str]] = None) -> int:
+    import argparse
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.session",
+        description="multi-trace session workflows")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("demo", help="build, save, reload and compare a "
+                                    "3-config synthetic sweep")
+    p.add_argument("--out", default="results/session_demo.json")
+    p.add_argument("--format", choices=("json", "npz"), default=None)
+    p.add_argument("--sites", type=int, default=2000)
+
+    p = sub.add_parser("show", help="per-trace summaries of a saved session")
+    p.add_argument("path")
+
+    p = sub.add_parser("table", help="n-way comparison table")
+    p.add_argument("path")
+    p.add_argument("--by", choices=("kind_link", "semantic"),
+                   default="kind_link")
+    p.add_argument("--metric", choices=("bytes", "time", "count"),
+                   default="bytes")
+
+    p = sub.add_parser("diff", help="pairwise deep-dive between two labels")
+    p.add_argument("path")
+    p.add_argument("label_a")
+    p.add_argument("label_b")
+
+    args = ap.parse_args(argv)
+
+    if args.cmd == "demo":
+        out = args.out
+        if args.format and not out.endswith("." + args.format):
+            out = os.path.splitext(out)[0] + "." + args.format
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        sess = demo_session(n_sites=args.sites)
+        path = sess.save(out)
+        loaded = TraceSession.load(path)
+        print(f"session '{loaded.name}': {len(loaded)} traces -> {path} "
+              f"({os.path.getsize(path)//1024} KB)")
+        _print_totals(loaded)
+        print()
+        print(loaded.table())
+        print()
+        print(loaded.table(by="semantic", metric="time"))
+        return 0
+
+    try:
+        sess = TraceSession.load(args.path)
+    except FileNotFoundError:
+        print(f"error: no such session file: {args.path}", file=sys.stderr)
+        return 2
+    except (KeyError, ValueError, json.JSONDecodeError) as e:
+        print(f"error: {args.path} is not a saved session ({e!r})",
+              file=sys.stderr)
+        return 2
+    if args.cmd == "show":
+        print(f"session '{sess.name}': {len(sess)} traces")
+        _print_totals(sess)
+    elif args.cmd == "table":
+        print(sess.table(by=args.by, metric=args.metric))
+    elif args.cmd == "diff":
+        try:
+            print(sess.diff(args.label_a, args.label_b))
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            return 2
+    return 0
+
+
+def _print_totals(sess: TraceSession) -> None:
+    rows = sess.totals()
+    print(f"  {'label':24s} {'sites':>7s} {'coll/step':>10s} {'GB':>9s} "
+          f"{'wireGB':>9s} {'est_ms':>9s} {'ovl_ms':>9s}")
+    for r in rows:
+        print(f"  {r['label']:24s} {r['sites']:7d} "
+              f"{int(r['collectives_per_step']):10d} "
+              f"{r['collective_gb']:9.3f} {r['wire_gb']:9.3f} "
+              f"{r['est_ms']:9.3f} {r['overlapped_ms']:9.3f}")
+
+
+if __name__ == "__main__":
+    raise SystemExit(_main())

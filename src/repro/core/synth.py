@@ -1,0 +1,100 @@
+"""Synthetic trace generation — controlled workloads for sessions/benches.
+
+The paper's comparison experiments need *many* traces from *different*
+configurations.  On hardwareless CI we synthesize them: random-but-seeded
+collective mixes laid out on a real `MeshSpec`, run through the real cost
+model and attribution pipeline, so every derived field (link class, wire
+bytes, protocol regime, semantic class) is produced by the same code paths
+a compiled-HLO trace exercises.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import attribution, costmodel
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.topology import Hardware, MeshSpec, V5E
+
+# (kind, scope path, relative weight) — a train-step-shaped mix
+_SITE_MIX: Tuple[Tuple[str, str, float], ...] = (
+    ("all-reduce", "layer/mlp", 3.0),
+    ("all-reduce", "opt_update", 2.0),
+    ("all-gather", "layer/attn", 2.0),
+    ("reduce-scatter", "opt_update", 1.5),
+    ("all-to-all", "layer/moe/dispatch", 1.0),
+    ("all-gather", "embed", 0.5),
+    ("all-reduce", "loss", 0.5),
+)
+
+_BYTE_CHOICES = np.array([1 << 10, 1 << 14, 1 << 18, 1 << 21,
+                          1 << 24, 1 << 26], dtype=np.int64)
+_MULT_CHOICES = np.array([1, 1, 1, 4, 12], dtype=np.int64)
+
+
+def _axis_groups(mesh: MeshSpec, axis_idx: int):
+    """All replica groups spanning exactly mesh axis `axis_idx`."""
+    ids = np.arange(mesh.num_devices).reshape(mesh.shape)
+    ids = np.moveaxis(ids, axis_idx, -1).reshape(-1, mesh.shape[axis_idx])
+    return [list(map(int, row)) for row in ids]
+
+
+def synthetic_trace(label: str, mesh: MeshSpec, hw: Hardware = V5E,
+                    n_sites: int = 1000, seed: int = 0,
+                    backward_fraction: float = 0.4,
+                    axis_weights: Optional[Sequence[float]] = None) -> Trace:
+    """Build an annotated `Trace` of `n_sites` synthetic collective sites.
+
+    `axis_weights` biases which mesh axis each collective spans (defaults
+    to uniform) — e.g. weight the `data` axis to mimic a DP-heavy run.
+    """
+    rng = np.random.default_rng(seed)
+    kinds = np.array([m[0] for m in _SITE_MIX])
+    scopes = np.array([m[1] for m in _SITE_MIX])
+    weights = np.array([m[2] for m in _SITE_MIX])
+    mix = rng.choice(len(_SITE_MIX), size=n_sites, p=weights / weights.sum())
+    axes_p = None
+    if axis_weights is not None:
+        axes_p = np.asarray(axis_weights, dtype=float)
+        axes_p = axes_p / axes_p.sum()
+    axis_pick = rng.choice(len(mesh.axes), size=n_sites, p=axes_p)
+    nbytes = rng.choice(_BYTE_CHOICES, size=n_sites)
+    mults = rng.choice(_MULT_CHOICES, size=n_sites)
+    backward = rng.random(n_sites) < backward_fraction
+
+    groups_by_axis = [_axis_groups(mesh, i) for i in range(len(mesh.shape))]
+    events = []
+    for i in range(n_sites):
+        kind, scope = kinds[mix[i]], scopes[mix[i]]
+        groups = groups_by_axis[axis_pick[i]]
+        wrap = "transpose(core_fn)/" if backward[i] else ""
+        op_name = f"jit(train_step)/{wrap}{scope}/{_PRIM_FOR.get(kind, 'psum')}"
+        events.append(CollectiveEvent(
+            name=f"{kind}.{i}",
+            kind=kind,
+            async_start=bool(rng.random() < 0.25),
+            operand_bytes=int(nbytes[i]),
+            result_bytes=int(nbytes[i]),
+            dtype="bf16",
+            replica_groups=groups,
+            group_size=len(groups[0]),
+            num_groups=len(groups),
+            op_name=op_name,
+            computation="main" if not backward[i] else "scan_body",
+            multiplicity=int(mults[i]),
+            channel_id=i + 1))
+    for ev in events:
+        costmodel.annotate_event(ev, mesh, hw)
+    attribution.attribute_all(events)
+    return Trace(label=label, mesh_shape=mesh.shape, mesh_axes=mesh.axes,
+                 num_devices=mesh.num_devices, events=events)
+
+
+_PRIM_FOR = {
+    "all-reduce": "psum",
+    "all-gather": "all_gather",
+    "reduce-scatter": "psum_scatter",
+    "all-to-all": "all_to_all",
+    "collective-permute": "ppermute",
+}

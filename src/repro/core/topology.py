@@ -131,9 +131,20 @@ def comm_matrix(mesh: MeshSpec, events, resolution: str = "device") -> np.ndarra
     The paper's Fig 3b analogue.  Ring collectives put traffic on ring
     neighbors within each replica group; permutes follow their explicit
     source->target pairs.
+
+    `events` may be a `Trace`, a `TraceStore`, or a plain event iterable.
+    The first two scatter a precomputed (src, dst, bytes) edge list with
+    one `np.add.at` call instead of walking Python objects.
     """
     n = mesh.num_devices
     mat = np.zeros((n, n))
+    store = getattr(events, "store", None)     # Trace -> its columnar store
+    if store is None and hasattr(events, "ring_edges"):
+        store = events                         # already a TraceStore
+    if store is not None:
+        src, dst, w = store.ring_edges()
+        np.add.at(mat, (src, dst), w)
+        return mat
     for e in events:
         mult = e.multiplicity
         if e.source_target_pairs:
@@ -157,9 +168,7 @@ def reduce_matrix(mat: np.ndarray, mesh: MeshSpec, axis: str) -> np.ndarray:
     ai = mesh.axes.index(axis)
     k = mesh.shape[ai]
     n = mat.shape[0]
-    labels = np.array([np.unravel_index(d, mesh.shape)[ai] for d in range(n)])
+    labels = np.unravel_index(np.arange(n), mesh.shape)[ai]
     out = np.zeros((k, k))
-    for a in range(k):
-        for b in range(k):
-            out[a, b] = mat[np.ix_(labels == a, labels == b)].sum()
+    np.add.at(out, (labels[:, None], labels[None, :]), mat)
     return out

@@ -34,6 +34,9 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
     # bodies once); fall back to cost_analysis when parsing finds nothing.
     tr.hlo_flops = float(stats.flops)
     tr.hlo_bytes = float(stats.bytes_accessed)
+    if isinstance(cost_analysis, (list, tuple)):
+        # older jax: Compiled.cost_analysis() returns [per-module dict]
+        cost_analysis = cost_analysis[0] if cost_analysis else None
     if cost_analysis:
         ca_flops = float(cost_analysis.get("flops", 0.0))
         ca_bytes = float(cost_analysis.get("bytes accessed", 0.0))

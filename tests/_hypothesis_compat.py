@@ -1,0 +1,109 @@
+"""Hypothesis shim: property tests degrade to fixed examples without it.
+
+The tier-1 suite must collect and run on a bare interpreter (numpy + jax
+only).  When `hypothesis` is installed we re-export it untouched; when it
+is missing, `@given` runs the test body over a small deterministic sample
+of each strategy (endpoints + interior points), and `@settings` is a no-op.
+The fallback covers exactly the strategy surface this suite uses
+(`integers`, `sampled_from`, plus a few neighbors for future tests) — it
+is an execution floor, not a replacement for real property testing.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    from typing import Any, List, Sequence
+
+    _MAX_EXAMPLES = 5
+
+    class _Strategy:
+        """A fixed, deterministic example list standing in for a strategy."""
+
+        def __init__(self, examples: Sequence[Any]):
+            self.examples: List[Any] = list(examples)
+
+        def map(self, fn):
+            return _Strategy([fn(x) for x in self.examples])
+
+        def filter(self, pred):
+            return _Strategy([x for x in self.examples if pred(x)])
+
+    def _dedup(seq):
+        out, seen = [], set()
+        for x in seq:
+            if x not in seen:
+                seen.add(x)
+                out.append(x)
+        return out
+
+    class _StrategiesShim:
+        @staticmethod
+        def integers(min_value: int = 0, max_value: int = 100) -> _Strategy:
+            lo, hi = int(min_value), int(max_value)
+            span = hi - lo
+            return _Strategy(_dedup([
+                lo, hi, lo + span // 2, lo + span // 3, lo + 2 * span // 3]))
+
+        @staticmethod
+        def sampled_from(elements) -> _Strategy:
+            return _Strategy(list(elements))
+
+        @staticmethod
+        def booleans() -> _Strategy:
+            return _Strategy([False, True])
+
+        @staticmethod
+        def floats(min_value: float = 0.0, max_value: float = 1.0,
+                   **_kw) -> _Strategy:
+            lo, hi = float(min_value), float(max_value)
+            return _Strategy(_dedup([lo, hi, (lo + hi) / 2]))
+
+        @staticmethod
+        def lists(elems: _Strategy, min_size: int = 0,
+                  max_size: int = 4, **_kw) -> _Strategy:
+            ex = elems.examples
+            out = [list(ex[:n]) for n in range(min_size, min(max_size,
+                                                             len(ex)) + 1)]
+            return _Strategy(out or [list(ex[:min_size])])
+
+        @staticmethod
+        def tuples(*strats: _Strategy) -> _Strategy:
+            n = max(len(s.examples) for s in strats) if strats else 0
+            return _Strategy([tuple(s.examples[i % len(s.examples)]
+                                    for s in strats) for i in range(n)])
+
+    strategies = _StrategiesShim()
+
+    def given(**param_strategies):
+        """Run the test over zipped fixed examples (capped at a handful)."""
+
+        def decorate(fn):
+            inner = inspect.unwrap(fn)
+
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = max((len(s.examples) for s in param_strategies.values()),
+                        default=0)
+                for i in range(min(n, _MAX_EXAMPLES)):
+                    example = {name: s.examples[i % len(s.examples)]
+                               for name, s in param_strategies.items()}
+                    fn(*args, **kwargs, **example)
+
+            # hide the generated params from pytest's fixture resolution
+            sig = inspect.signature(inner)
+            kept = [p for p in sig.parameters.values()
+                    if p.name not in param_strategies]
+            wrapper.__signature__ = sig.replace(parameters=kept)
+            del wrapper.__wrapped__
+            return wrapper
+
+        return decorate
+
+    def settings(*_a, **_kw):
+        return lambda fn: fn

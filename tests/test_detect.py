@@ -1,0 +1,134 @@
+"""Per-detector coverage: each fires on a crafted trace and stays silent
+on a benign one (the Fig 7 misconfiguration-detection analogue)."""
+from repro.core import detect
+from repro.core.events import CollectiveEvent, HloOpStats, Trace
+
+
+def mk_event(**kw):
+    base = dict(name="ar", kind="all-reduce", async_start=False,
+                operand_bytes=1 << 22, result_bytes=1 << 22, dtype="f32",
+                replica_groups=[[0, 1, 2, 3]], group_size=4, num_groups=1,
+                op_name="", computation="main", link_class="ici.data",
+                axes=("data",), protocol="rndv", wire_bytes_per_device=1 << 21,
+                est_time_s=1e-4)
+    base.update(kw)
+    return CollectiveEvent(**base)
+
+
+def mk_trace(events, **kw):
+    return Trace(label="t", mesh_shape=(2, 2), mesh_axes=("data", "model"),
+                 num_devices=4, events=events, **kw)
+
+
+# -- redundant_collective ---------------------------------------------------
+
+def test_redundant_gathers_fires_on_duplicates():
+    evs = [mk_event(name=f"ag{i}", kind="all-gather", scope="layer/attn")
+           for i in range(3)]
+    findings = detect.detect_redundant_gathers(mk_trace(evs))
+    assert len(findings) == 1
+    f = findings[0]
+    assert f.detector == "redundant_collective"
+    assert "3x identical all-gather" in f.message
+    assert f.wasted_bytes == 2 * (1 << 22)      # (count-1) x bytes x mult
+
+
+def test_redundant_gathers_silent_on_distinct_scopes():
+    evs = [mk_event(name=f"ag{i}", kind="all-gather", scope=f"layer{i}")
+           for i in range(3)]
+    assert detect.detect_redundant_gathers(mk_trace(evs)) == []
+
+
+def test_redundant_gathers_ignores_small_payloads():
+    evs = [mk_event(name=f"ag{i}", kind="all-gather",
+                    operand_bytes=1 << 10, scope="s") for i in range(4)]
+    assert detect.detect_redundant_gathers(mk_trace(evs)) == []
+
+
+# -- axis_detour ------------------------------------------------------------
+
+def test_axis_detour_fires_on_wrong_axis():
+    ev = mk_event(semantic="grad_sync", axes=("model",),
+                  link_class="ici.model")
+    out = detect.detect_axis_detours(mk_trace([ev]), {"grad_sync": "data"})
+    assert len(out) == 1
+    assert out[0].detector == "axis_detour"
+    assert "expected only 'data'" in out[0].message
+
+
+def test_axis_detour_silent_on_expected_axis():
+    ev = mk_event(semantic="grad_sync", axes=("data",))
+    assert detect.detect_axis_detours(mk_trace([ev]),
+                                      {"grad_sync": "data"}) == []
+
+
+def test_axis_detour_exempts_small_payloads():
+    ev = mk_event(semantic="grad_sync", axes=("model",),
+                  operand_bytes=1 << 10)
+    assert detect.detect_axis_detours(mk_trace([ev]),
+                                      {"grad_sync": "data"}) == []
+
+
+# -- eager_flood ------------------------------------------------------------
+
+def test_eager_flood_fires_on_many_tiny_transfers():
+    evs = [mk_event(name=f"e{i}", protocol="eager", operand_bytes=1 << 8,
+                    multiplicity=8) for i in range(10)]
+    out = detect.detect_eager_floods(mk_trace(evs))
+    assert len(out) == 1
+    assert out[0].detector == "eager_flood"
+    assert "80 latency-bound" in out[0].message
+
+
+def test_eager_flood_silent_below_threshold():
+    evs = [mk_event(name=f"e{i}", protocol="eager") for i in range(3)]
+    assert detect.detect_eager_floods(mk_trace(evs)) == []
+
+
+# -- layout_thrash ----------------------------------------------------------
+
+def test_layout_thrash_fires_on_heavy_transposes():
+    stats = HloOpStats(n_transpose=100, transpose_bytes=2 << 30)
+    out = detect.detect_layout_thrash(mk_trace([], op_stats=stats))
+    assert len(out) == 1
+    assert out[0].detector == "layout_thrash"
+
+
+def test_layout_thrash_silent_below_threshold():
+    stats = HloOpStats(n_transpose=3, transpose_bytes=1 << 20)
+    assert detect.detect_layout_thrash(mk_trace([], op_stats=stats)) == []
+
+
+# -- cross_pod_bulk ---------------------------------------------------------
+
+def test_cross_pod_bulk_fires_on_heavy_dci():
+    ev = mk_event(link_class="dci.pod", axes=("pod",),
+                  wire_bytes_per_device=1 << 29)   # x4 devices > 1 GB
+    out = detect.detect_cross_pod_bulk(mk_trace([ev]))
+    assert len(out) == 1
+    assert out[0].detector == "cross_pod_bulk"
+
+
+def test_cross_pod_bulk_silent_on_ici_traffic():
+    ev = mk_event(link_class="ici.data", wire_bytes_per_device=1 << 29)
+    assert detect.detect_cross_pod_bulk(mk_trace([ev])) == []
+
+
+# -- run_all ----------------------------------------------------------------
+
+def test_run_all_combines_detectors():
+    evs = [mk_event(name=f"ag{i}", kind="all-gather", scope="layer/attn")
+           for i in range(2)]
+    evs += [mk_event(name=f"e{i}", protocol="eager", multiplicity=16,
+                     operand_bytes=1 << 8) for i in range(8)]
+    evs.append(mk_event(semantic="grad_sync", axes=("model",),
+                        link_class="ici.model"))
+    tr = mk_trace(evs, op_stats=HloOpStats(transpose_bytes=2 << 30))
+    findings = detect.run_all(tr, expected_axes={"grad_sync": "data"})
+    detectors = {f.detector for f in findings}
+    assert {"redundant_collective", "axis_detour", "eager_flood",
+            "layout_thrash"} <= detectors
+
+
+def test_detectors_empty_trace():
+    assert detect.run_all(mk_trace([])) == []

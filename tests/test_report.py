@@ -1,0 +1,127 @@
+"""Renderer coverage: tables, matrices, timeline, JSON/HTML outputs."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import report
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.topology import MeshSpec
+
+
+def mk_event(**kw):
+    base = dict(name="ar", kind="all-reduce", async_start=False,
+                operand_bytes=1 << 20, result_bytes=1 << 20, dtype="bf16",
+                replica_groups=[[0, 1, 2, 3]], group_size=4, num_groups=1,
+                op_name="jit(f)/layer/mlp/psum", computation="main",
+                link_class="ici.data", axes=("data",), semantic="ffn",
+                jax_prim="psum", scope="layer/mlp", protocol="rndv",
+                wire_bytes_per_device=1.5 * (1 << 20), est_time_s=1e-4)
+    base.update(kw)
+    return CollectiveEvent(**base)
+
+
+@pytest.fixture
+def trace():
+    evs = [
+        mk_event(),
+        mk_event(name="ag", kind="all-gather", semantic="attention",
+                 scope="layer/attn", operand_bytes=1 << 22, multiplicity=4),
+        mk_event(name="gs", semantic="grad_sync", scope="opt_update",
+                 operand_bytes=1 << 24, est_time_s=5e-4),
+        mk_event(name="cp", kind="collective-permute", semantic="pipeline",
+                 replica_groups=[[0, 1]], group_size=2,
+                 source_target_pairs=[(0, 1), (1, 2), (2, 3), (3, 0)]),
+    ]
+    return Trace(label="unit", mesh_shape=(2, 2), mesh_axes=("data", "model"),
+                 num_devices=4, events=evs, hlo_flops=1e12, hlo_bytes=1e9)
+
+
+def test_top_contenders_table(trace):
+    out = report.top_contenders_table(trace)
+    assert "all-reduce|ici.data" in out
+    assert "all-gather|ici.data" in out
+    lines = out.splitlines()
+    assert lines[0].split()[0] == "key"
+    assert lines[-1].startswith("total")
+    assert "100.0%" in lines[-1]
+    # rows sorted by descending bytes: grad_sync's 16MB all-reduce first
+    assert "all-reduce" in lines[1]
+
+
+def test_semantic_table(trace):
+    out = report.semantic_table(trace)
+    for sem in ("ffn", "attention", "grad_sync", "pipeline"):
+        assert sem in out
+
+
+def test_ascii_matrix_shading():
+    mat = np.array([[0.0, 10.0], [5.0, 0.0]])
+    out = report.ascii_matrix(mat, labels=["a", "b"])
+    lines = out.splitlines()
+    assert len(lines) == 2
+    assert lines[0].strip().startswith("a |")
+    # peak cell renders the densest shade, zero renders blank
+    assert "@" in lines[0]
+    assert out.count("@") == 1
+
+
+def test_ascii_matrix_all_zero():
+    out = report.ascii_matrix(np.zeros((2, 2)))
+    assert "@" not in out
+
+
+def test_timeline(trace):
+    out = report.timeline(trace)
+    lines = out.splitlines()
+    assert "t_start_us" in lines[0]
+    # heaviest (est*mult) first: grad_sync all-reduce (500us)
+    assert "grad_sync" in lines[1]
+    assert len(lines) == 1 + trace.store.n
+
+
+def test_summary(trace):
+    out = report.summary(trace)
+    assert "trace 'unit'" in out
+    assert f"({trace.store.n} sites)" in out
+
+
+def test_to_json_roundtrips(trace):
+    payload = json.loads(report.to_json(trace))
+    assert payload["label"] == "unit"
+    assert payload["mesh_shape"] == [2, 2]
+    assert len(payload["events"]) == 4
+    ev = {e["name"]: e for e in payload["events"]}
+    assert ev["gs"]["semantic"] == "grad_sync"
+    assert ev["ag"]["mult"] == 4
+    assert ev["ar"]["bytes"] == 1 << 20
+    # JSON -> string -> JSON is stable
+    assert json.loads(json.dumps(payload)) == payload
+
+
+def test_to_html_self_contained(trace):
+    mesh = MeshSpec((2, 2), ("data", "model"))
+    html = report.to_html(trace, mesh)
+    assert html.startswith("<!doctype html>")
+    assert "trace: unit" in html
+    # self-contained: no external fetches
+    assert "src=\"http" not in html and "href=\"http" not in html
+    assert "<script src" not in html
+    # one heatmap per mesh axis + the main sections
+    assert html.count("comm matrix over axis") == 2
+    for section in ("top contenders", "semantic", "modeled timeline"):
+        assert section in html
+
+
+def test_session_table_renders(trace):
+    other = Trace(label="variant", mesh_shape=(2, 2),
+                  mesh_axes=("data", "model"), num_devices=4,
+                  events=[mk_event(operand_bytes=1 << 23)])
+    out = report.session_table([trace, other])
+    assert "unit" in out and "variant" in out
+    assert "TOTAL modeled collective ms" in out
+    assert "best=" in out
+
+
+def test_session_table_empty():
+    assert report.session_table([]) == "(empty session)"

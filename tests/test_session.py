@@ -1,0 +1,178 @@
+"""TraceStore round-trips, columnar/legacy equivalence, TraceSession I/O."""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.session import (TraceSession, demo_session, trace_from_dict,
+                                trace_to_dict)
+from repro.core.store import TraceStore
+from repro.core.synth import synthetic_trace
+from repro.core.topology import MeshSpec
+
+
+def rand_trace(seed: int, n_sites: int = 200, mesh=None) -> Trace:
+    mesh = mesh or MeshSpec((2, 4), ("data", "model"))
+    return synthetic_trace(f"rand{seed}", mesh, n_sites=n_sites, seed=seed)
+
+
+def agg_close(a, b):
+    assert set(a) == set(b), (set(a) ^ set(b))
+    for k in a:
+        for field in ("bytes", "wire_bytes", "count", "time_s"):
+            assert a[k][field] == pytest.approx(b[k][field], rel=1e-12), \
+                (k, field)
+
+
+# -- columnar vs legacy per-event equivalence -------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_by_kind_and_link_matches_legacy(seed):
+    tr = rand_trace(seed)
+    agg_close(tr.by_kind_and_link(),
+              tr.by(lambda e: f"{e.kind}|{e.link_class}"))
+
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=10, deadline=None)
+def test_by_semantic_matches_legacy(seed):
+    tr = rand_trace(seed)
+    agg_close(tr.by_semantic(), tr.by(lambda e: e.semantic or "other"))
+
+
+def test_by_sem_kind_link_matches_legacy():
+    tr = rand_trace(7)
+    agg_close(tr.store.by_sem_kind_link(),
+              tr.by(lambda e: f"{e.semantic}|{e.kind}|{e.link_class}"))
+
+
+def test_totals_match_legacy():
+    tr = rand_trace(3)
+    evs = tr.events
+    assert tr.total_collective_bytes() == pytest.approx(
+        sum(e.operand_bytes * e.multiplicity for e in evs))
+    assert tr.total_wire_bytes() == pytest.approx(
+        sum(e.total_wire_bytes * e.multiplicity for e in evs))
+    assert tr.total_est_time_s() == pytest.approx(
+        sum(e.est_time_s * e.multiplicity for e in evs))
+    per_class = {}
+    for e in evs:
+        per_class[e.link_class] = per_class.get(e.link_class, 0.0) \
+            + e.est_time_s * e.multiplicity
+    assert tr.overlapped_est_time_s() == pytest.approx(max(per_class.values()))
+
+
+def test_comm_matrix_store_matches_legacy():
+    from repro.core.topology import comm_matrix
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    tr = rand_trace(11, mesh=mesh)
+    fast = comm_matrix(mesh, tr)                  # columnar edge-list path
+    slow = comm_matrix(mesh, list(tr.events))     # per-event reference
+    np.testing.assert_allclose(fast, slow, rtol=1e-12)
+
+
+def test_empty_trace_aggregates():
+    tr = Trace(label="empty", mesh_shape=(2,), mesh_axes=("data",),
+               num_devices=2, events=[])
+    assert tr.by_kind_and_link() == {}
+    assert tr.by_semantic() == {}
+    assert tr.total_est_time_s() == 0.0
+    assert tr.overlapped_est_time_s() == 0.0
+
+
+# -- row views + store round-trip -------------------------------------------
+
+def test_store_rows_roundtrip_events():
+    tr = rand_trace(5, n_sites=50)
+    rows = tr.store.rows()
+    assert rows == tr.events          # dataclass equality, field by field
+
+
+def test_store_dict_roundtrip_identical_aggregates():
+    tr = rand_trace(9)
+    store2 = TraceStore.from_dict(
+        json.loads(json.dumps(tr.store.to_dict())))
+    assert store2.n == tr.store.n
+    agg_close(store2.by_kind_and_link(), tr.by_kind_and_link())
+    agg_close(store2.by_semantic(), tr.by_semantic())
+    assert store2.rows() == tr.store.rows()
+
+
+def test_trace_dict_roundtrip(tmp_path):
+    tr = rand_trace(13)
+    tr.hlo_flops = 1.5e12
+    tr2 = trace_from_dict(json.loads(json.dumps(trace_to_dict(tr))))
+    assert tr2.label == tr.label
+    assert tr2.mesh_shape == tr.mesh_shape
+    assert tr2.hlo_flops == tr.hlo_flops
+    agg_close(tr2.by_kind_and_link(), tr.by_kind_and_link())
+    assert tr2.events == tr.events
+
+
+def test_trace_store_invalidation_on_append():
+    tr = rand_trace(1, n_sites=10)
+    before = tr.total_collective_bytes()
+    ev = tr.events[0]
+    tr.events.append(CollectiveEvent(
+        name="extra", kind=ev.kind, async_start=False,
+        operand_bytes=1 << 25, result_bytes=1 << 25, dtype="bf16",
+        replica_groups=ev.replica_groups, group_size=ev.group_size,
+        num_groups=ev.num_groups, op_name="", computation="main"))
+    assert tr.total_collective_bytes() == pytest.approx(before + (1 << 25))
+
+
+# -- sessions ---------------------------------------------------------------
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_session_save_load_roundtrip(tmp_path, ext):
+    sess = TraceSession("unit", [rand_trace(0, 100), rand_trace(1, 100)])
+    path = sess.save(str(tmp_path / f"s.{ext}"))
+    loaded = TraceSession.load(path)
+    assert loaded.name == "unit"
+    assert loaded.labels() == sess.labels()
+    for a, b in zip(sess, loaded):
+        agg_close(a.by_kind_and_link(), b.by_kind_and_link())
+        agg_close(a.by_semantic(), b.by_semantic())
+        assert a.total_est_time_s() == pytest.approx(b.total_est_time_s())
+
+
+def test_session_rejects_duplicate_labels():
+    sess = TraceSession("unit", [rand_trace(0, 20)])
+    with pytest.raises(ValueError):
+        sess.add(rand_trace(0, 20))
+
+
+def test_session_get_and_diff():
+    sess = TraceSession("unit", [rand_trace(0, 100), rand_trace(1, 100)])
+    assert sess.get("rand0").label == "rand0"
+    with pytest.raises(KeyError):
+        sess.get("nope")
+    out = sess.diff("rand0", "rand1")
+    assert "trace diff" in out
+
+
+def test_session_table_and_totals():
+    sess = demo_session(n_sites=200)
+    assert len(sess) == 3
+    out = sess.table()
+    for label in sess.labels():
+        assert label[:10] in out
+    totals = sess.totals()
+    assert len(totals) == 3
+    assert all(r["est_ms"] > 0 for r in totals)
+    # semantic view has the MPI-layer classes
+    assert "grad_sync" in sess.table(by="semantic", metric="time")
+
+
+def test_session_cli_demo(tmp_path, capsys):
+    from repro.core.session import _main
+    out_path = str(tmp_path / "demo.json")
+    assert _main(["demo", "--out", out_path, "--sites", "120"]) == 0
+    captured = capsys.readouterr().out
+    assert "3 traces" in captured
+    assert "session comparison" in captured
+    assert _main(["show", out_path]) == 0
+    assert _main(["table", out_path, "--by", "semantic"]) == 0

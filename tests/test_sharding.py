@@ -5,7 +5,7 @@ dicts, so we exercise the exact production mesh shapes without 512 devices.
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_ORDER, SHAPES, get_config, shape_applicable

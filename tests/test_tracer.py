@@ -1,7 +1,7 @@
 """Unit + property tests for the tracer core (the paper's contribution)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import attribution, costmodel, hlo_parser, topology
 from repro.core.events import CollectiveEvent, Trace
