@@ -5,17 +5,28 @@ is compile-time: the overhead is pure offline analysis (HLO parse + assembly)
 on top of an unavoidable lower+compile, with zero runtime cost.  We measure
 lower/compile/parse wall time and trace size for a dense and a MoE step.
 
-Also measures the *analysis* hot path at the paper's experiment scale: a
-100k-event synthetic trace aggregated by (kind x link) + semantic, columnar
-(`TraceStore` bincount) vs the per-event Python reference — the columnar
-path must be >= 5x faster.
+Also measures the two analysis hot paths at the paper's experiment scale:
+
+  * aggregation — a 100k-event trace rolled up by (kind x link) + semantic,
+    columnar (`TraceStore` bincount) vs the per-event Python reference
+    (>= 5x gate), and
+  * end-to-end ingest — parse -> attribute -> annotate -> store of a
+    100k-site synthetic HLO module, single-pass columnar engine vs the
+    per-event reference pipeline (>= 5x gate, byte-identical aggregates).
+    The result is persisted to BENCH_ingest.json at the repo root so the
+    perf trajectory is tracked across PRs.
+
+CI smoke entry point (no jax worker, smaller trace):
+
+    python benchmarks/bench_overhead.py --ingest-only [--sites N]
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 
-from _util import run_worker
+from _util import REPO, run_worker
 
 WORKER = """
 import json, time
@@ -118,10 +129,111 @@ def _agg_100k_case(n_sites: int = 100_000, iters: int = 3):
     ]
 
 
+def _ingest_case(n_sites: int = 100_000, json_path: str = None):
+    """End-to-end ingest: parse -> attribute -> annotate -> store, columnar
+    engine vs per-event reference, with an exact-equality aggregate guard.
+
+    Gate: >= 5x at 100k sites, batched aggregates byte-identical to the
+    per-event reference path.
+    """
+    from repro.core.synth import synthetic_hlo
+    from repro.core.topology import MeshSpec
+    from repro.core.tracer import trace_from_hlo
+
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    text = synthetic_hlo(n_sites=n_sites, seed=0)
+
+    def aggregates(tr):
+        return (tr.by_kind_and_link(), tr.by_semantic(),
+                tr.total_collective_bytes(), tr.total_wire_bytes(),
+                tr.total_est_time_s(), tr.overlapped_est_time_s())
+
+    t0 = time.perf_counter()
+    tr_ref = trace_from_hlo(text, mesh, label="ref", engine="rows")
+    ref_aggs = aggregates(tr_ref)
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    tr_fast = trace_from_hlo(text, mesh, label="fast", engine="columnar")
+    fast_aggs = aggregates(tr_fast)
+    t_fast = time.perf_counter() - t0
+
+    sites = tr_fast.sites
+    # equivalence guard: byte-identical aggregates (exact ==, no tolerance)
+    equivalent = (sites == tr_ref.sites and ref_aggs == fast_aggs)
+    speedup = t_ref / max(t_fast, 1e-9)
+    payload = {
+        "bench": "ingest_e2e",
+        "sites": sites,
+        "hlo_kb": len(text) // 1024,
+        "ref_s": round(t_ref, 4),
+        "columnar_s": round(t_fast, 4),
+        "ref_events_per_sec": round(sites / max(t_ref, 1e-9)),
+        "columnar_events_per_sec": round(sites / max(t_fast, 1e-9)),
+        "speedup": round(speedup, 2),
+        "target": 5.0,
+        "equivalent": equivalent,
+    }
+    if json_path is None:
+        # the repo-root artifact tracks the perf trajectory across PRs —
+        # only full-size runs may write it (smoke sizes are not comparable)
+        if n_sites >= 100_000:
+            json_path = os.path.join(REPO, "BENCH_ingest.json")
+        else:
+            os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
+            json_path = os.path.join(REPO, "results", "BENCH_ingest_smoke.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    rows = [
+        (f"overhead/ingest{n_sites//1000}k/per_event", t_ref * 1e6,
+         "baseline-cost"),
+        (f"overhead/ingest{n_sites//1000}k/columnar", t_fast * 1e6,
+         f"speedup={speedup:.1f}x|target>=5x|sites={sites}|"
+         f"events_per_sec={payload['columnar_events_per_sec']}|"
+         f"equivalent={equivalent}"),
+    ]
+    return rows, payload
+
+
 def run():
     rows = _agg_100k_case()
+    ingest_rows, _payload = _ingest_case()      # 100k: writes BENCH_ingest.json
+    rows += ingest_rows
     out = run_worker(WORKER, devices=8)
     for line in out.splitlines():
         if line.startswith("JSON"):
             return rows + [tuple(r) for r in json.loads(line[4:])]
     raise RuntimeError("no JSON output from worker")
+
+
+if __name__ == "__main__":
+    # smoke entry point for CI: the ingest case only (pure numpy, no jax
+    # compile workers), with a configurable trace size.
+    import argparse
+    import sys
+
+    sys.path.insert(0, os.path.join(REPO, "src"))
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ingest-only", action="store_true")
+    ap.add_argument("--sites", type=int,
+                    default=int(os.environ.get("INGEST_SITES", 100_000)))
+    args = ap.parse_args()
+    if not args.ingest_only:
+        ap.error("only --ingest-only is supported as a direct entry point")
+    rows, payload = _ingest_case(n_sites=args.sites)
+    dest = "BENCH_ingest.json" if args.sites >= 100_000 \
+        else "results/BENCH_ingest_smoke.json"
+    for name, us, derived in rows:
+        print(f"{name},{us:.2f},{derived}")
+    if not payload["equivalent"]:
+        print("FAIL: columnar ingest aggregates diverge from the "
+              "per-event reference", file=sys.stderr)
+        sys.exit(1)
+    if payload["speedup"] < payload["target"] and args.sites >= 100_000:
+        print(f"FAIL: ingest speedup {payload['speedup']}x below the "
+              f"{payload['target']}x gate", file=sys.stderr)
+        sys.exit(1)
+    print(f"ingest ok: {payload['speedup']}x at {payload['sites']} sites "
+          f"-> {dest}")

@@ -2,7 +2,10 @@
 
     PYTHONPATH=src python -m benchmarks.run [--only NAME]
 
-Prints `name,us_per_call,derived` CSV.  Paper mapping:
+Prints `name,us_per_call,derived` CSV.  `bench_overhead` additionally
+persists the end-to-end ingest result (events/sec, speedup vs the
+per-event reference, equivalence verdict) to `BENCH_ingest.json` at the
+repo root so the perf trajectory is tracked across PRs.  Paper mapping:
     bench_protocols   — Fig 4   (eager vs rendezvous regimes)
     bench_allreduce   — Fig 5   (Allreduce algorithm comparison)
     bench_comm_graph  — Fig 6 + Table II (comm graphs, top contenders)
@@ -18,7 +21,7 @@ import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
-from _util import emit  # noqa: E402
+from _util import REPO, emit  # noqa: E402
 
 BENCHES = [
     "bench_protocols",
@@ -48,6 +51,11 @@ def main() -> None:
         except Exception as e:  # keep the harness going; report at the end
             failures.append((name, repr(e)))
             print(f"{name}/FAILED,-1,{type(e).__name__}")
+        else:
+            if name == "bench_overhead":
+                path = os.path.join(REPO, "BENCH_ingest.json")
+                if os.path.exists(path):
+                    print(f"# wrote {path}", file=sys.stderr)
     if failures:
         for name, err in failures:
             print(f"# FAILURE {name}: {err[:300]}", file=sys.stderr)

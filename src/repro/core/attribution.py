@@ -16,6 +16,8 @@ from __future__ import annotations
 import re
 from typing import Iterable, List, Tuple
 
+import numpy as np
+
 from repro.core.events import CollectiveEvent
 
 # transformations wrappers that appear as path components but are not scopes
@@ -96,3 +98,51 @@ def attribute_event(ev: CollectiveEvent, dp_axes=DP_AXES) -> None:
 def attribute_all(events: Iterable[CollectiveEvent], dp_axes=DP_AXES) -> None:
     for ev in events:
         attribute_event(ev, dp_axes)
+
+
+# --------------------------------------------------------------------------
+# batched path: run the regex cascade once per unique vocab entry
+# --------------------------------------------------------------------------
+
+def attribute_store(store, dp_axes=DP_AXES) -> None:
+    """Columnar `attribute_event`: fill scope/jax_prim/semantic in place.
+
+    `op_name` strings are heavily repeated (one per HLO op site, but drawn
+    from a small set of named-scope paths), so `split_op_name` and
+    `is_backward` run once per *vocab entry* of the interned `op_name`
+    column.  The semantic cascade additionally depends on (kind, axes) —
+    it runs once per unique (op_name, kind, axes) code triple and
+    broadcasts through the composite codes.  Field-for-field equivalent to
+    `attribute_all(store.rows())` — pinned by tests/test_ingest.py.
+    """
+    from repro.core.store import Categorical, build_remap
+
+    n = store.n
+    if n == 0:
+        store.scope = Categorical.constant(0)
+        store.jax_prim = Categorical.constant(0)
+        store.semantic = Categorical.constant(0)
+        return
+
+    on_vocab = store.op_name.vocab
+    split = [split_op_name(name) for name in on_vocab]
+    backward = [is_backward(name) for name in on_vocab]
+    store.scope = store.op_name.remap_table([s for s, _ in split])
+    store.jax_prim = store.op_name.remap_table([p for _, p in split])
+
+    # semantic: unique (op_name, kind, axes) triples
+    nk = max(len(store.kind.vocab), 1)
+    na = max(len(store.axes_tables), 1)
+    combo = (store.op_name.codes.astype(np.int64) * nk
+             + store.kind.codes) * na + store.axes_code
+    uniq, inv = np.unique(combo, return_inverse=True)
+    labels = []
+    for code in uniq:
+        oc, r = divmod(int(code), nk * na)
+        kc, ac = divmod(r, na)
+        labels.append(classify(
+            split[oc][0], split[oc][1], store.kind.vocab[kc],
+            in_backward=backward[oc], axes=store.axes_tables[ac],
+            dp_axes=dp_axes))
+    sem_map, sem_vocab = build_remap(labels)
+    store.semantic = Categorical(sem_map[inv], sem_vocab)

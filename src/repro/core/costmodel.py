@@ -15,6 +15,8 @@ from __future__ import annotations
 import math
 from typing import Tuple
 
+import numpy as np
+
 from repro.core.events import CollectiveEvent
 from repro.core.topology import (Hardware, MeshSpec, hop_latency, link_class,
                                  slowest_link_bw, varying_axes)
@@ -85,6 +87,100 @@ def annotate_event(ev: CollectiveEvent, mesh: MeshSpec, hw: Hardware) -> None:
         ev.kind, ev.operand_bytes, ev.group_size)
     ev.protocol = protocol_regime(ev, hw)
     ev.est_time_s = estimate_time_s(ev, mesh, hw)
+
+
+# --------------------------------------------------------------------------
+# batched path: one vectorized pass over TraceStore columns
+# --------------------------------------------------------------------------
+
+def annotate_store(store, mesh: MeshSpec, hw: Hardware) -> None:
+    """Columnar `annotate_event`: fill topology + completion columns in place.
+
+    Topology resolution (`varying_axes`, `link_class`, link bw/latency) runs
+    once per *unique* replica-group / permute table and broadcasts through
+    the store's int32 codes; wire bytes, latency hops, protocol regime, and
+    `est_time_s` are vectorized numpy expressions branching on the interned
+    `kind` codes via masks.  Field-for-field (bit-for-bit on the float
+    columns) equivalent to running `annotate_event` over `store.rows()` —
+    pinned by tests/test_ingest.py.
+    """
+    from repro.core.store import Categorical, build_remap
+
+    n = store.n
+    if n == 0:
+        store.link_class = Categorical.constant(0)
+        store.protocol = Categorical.constant(0)
+        return
+
+    # ---- axes: once per unique group table (permute pairs override) -------
+    ax_index = {}
+    axes_tables = []
+
+    def _ax_code(t: Tuple[str, ...]) -> int:
+        c = ax_index.get(t)
+        if c is None:
+            c = ax_index[t] = len(axes_tables)
+            axes_tables.append(t)
+        return c
+
+    g_codes = np.fromiter(
+        (_ax_code(varying_axes(mesh, groups[0] if groups else []))
+         for groups in store.group_tables),
+        dtype=np.int32, count=len(store.group_tables))
+    axes_code = (g_codes[store.group_code] if len(g_codes)
+                 else np.zeros(n, dtype=np.int32))
+    stp_mask = store.stp_code >= 0
+    if stp_mask.any():
+        s_codes = np.fromiter(
+            (_ax_code(varying_axes(mesh, [pairs[0][0], pairs[0][1]]))
+             for pairs in store.stp_tables),
+            dtype=np.int32, count=len(store.stp_tables))
+        axes_code[stp_mask] = s_codes[store.stp_code[stp_mask]]
+    store.set_axes(axes_tables, axes_code)
+
+    # ---- per-axes-class scalars, broadcast per row ------------------------
+    lc_map, lc_vocab = build_remap([link_class(mesh, t) for t in axes_tables])
+    store.link_class = Categorical(lc_map[axes_code], lc_vocab)
+
+    bw = np.array([slowest_link_bw(mesh, t, hw) for t in axes_tables],
+                  dtype=np.float64)[axes_code]
+    lat = np.array([hop_latency(mesh, t, hw) for t in axes_tables],
+                   dtype=np.float64)[axes_code]
+
+    # ---- wire bytes + latency hops: masks over interned kind codes -------
+    kc = store.kind.codes
+    ob = store.operand_bytes
+    nn = np.maximum(store.group_size, 1)
+    per_shard = ob / nn
+    wire = ob.astype(np.float64)                  # permute/broadcast/default
+    hops = np.ones(n, dtype=np.int64)
+    for code, kind in enumerate(store.kind.vocab):
+        mask = kc == code
+        if not mask.any():
+            continue
+        if kind == "all-reduce":
+            wire[mask] = (2.0 * (nn[mask] - 1)) * per_shard[mask]
+            hops[mask] = 2 * (nn[mask] - 1)
+        elif kind in ("all-gather", "reduce-scatter"):
+            wire[mask] = (nn[mask] - 1) * per_shard[mask]
+            hops[mask] = nn[mask] - 1
+        elif kind in ("all-to-all", "ragged-all-to-all"):
+            wire[mask] = ob[mask] * (nn[mask] - 1) / nn[mask]
+            hops[mask] = nn[mask] - 1
+    single = nn == 1
+    wire[single] = 0.0
+    hops[single] = 0
+    store.wire_bytes_per_device = wire
+
+    # ---- protocol regime + completion time --------------------------------
+    eager = per_shard < hw.rndv_threshold
+    proto_codes = np.where(eager, np.int32(0), np.int32(1))
+    store.protocol = Categorical(proto_codes, ["eager", "rndv"])
+
+    eff_bw = 2.0 * bw
+    t_bw = np.divide(wire, eff_bw, out=np.zeros(n, dtype=np.float64),
+                     where=eff_bw != 0.0)
+    store.est_time_s = hops * lat + t_bw
 
 
 # --------------------------------------------------------------------------

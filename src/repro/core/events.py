@@ -72,16 +72,20 @@ class HloOpStats:
 class Trace:
     """A complete multi-layer communication trace of one compiled step.
 
-    Events are accepted as a list of `CollectiveEvent` (the parser/cost-model
-    construction format) but aggregation runs on a lazily-built columnar
-    `TraceStore` (see store.py): named rollups and totals are `np.bincount`
-    over interned codes, not Python loops.  `events` stays the row view —
-    a trace loaded from a saved store materializes rows only on first
-    access.  Staleness detection is by length only: reassigning `events`
-    or changing the list's length invalidates the store automatically;
-    any same-length mutation (replacing a list item, editing an event's
-    fields in place) after an aggregate was computed requires an explicit
-    `invalidate()`.
+    The trace is columnar end to end: the default ingest path
+    (`tracer.trace_from_hlo(engine="columnar")`) parses straight into a
+    `TraceStore` (see store.py) and this class is built `from_store`, with
+    `events` as a lazily-materialized row view — exactly like a trace
+    loaded from a saved store.  Named rollups and totals are `np.bincount`
+    over interned codes, not Python loops.
+
+    Events can still be *supplied* as a list of `CollectiveEvent` (the
+    per-event reference pipeline and hand-built test traces); the store is
+    then built lazily from the rows.  Staleness detection is by length
+    only: reassigning `events` or changing the list's length invalidates
+    the store automatically; any same-length mutation (replacing a list
+    item, editing an event's fields in place) after an aggregate was
+    computed requires an explicit `invalidate()`.
     """
 
     def __init__(self, label: str, mesh_shape: Tuple[int, ...],
@@ -110,9 +114,13 @@ class Trace:
         self._store = store
 
     def __repr__(self) -> str:
-        n = len(self._events) if self._events is not None else self._store.n
         return (f"Trace(label={self.label!r}, mesh_shape={self.mesh_shape}, "
-                f"mesh_axes={self.mesh_axes}, sites={n})")
+                f"mesh_axes={self.mesh_axes}, sites={self.sites})")
+
+    @property
+    def sites(self) -> int:
+        """Number of collective op sites (without materializing rows)."""
+        return len(self._events) if self._events is not None else self._store.n
 
     # ---- columnar backing --------------------------------------------------
 

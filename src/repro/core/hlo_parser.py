@@ -155,13 +155,48 @@ def _trip_count(cond_comp: _Computation) -> int:
     return best
 
 
+def _call_edges(comps: Dict[str, _Computation]
+                ) -> Dict[str, List[Tuple[str, int]]]:
+    """(caller -> [(callee, trip_factor)]) — extracted in ONE pass over the
+    lines (with substring prescreens), so the fixpoint propagation below
+    iterates over the tiny call graph instead of re-regexing every line."""
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    tc_cache: Dict[str, int] = {}
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        es: List[Tuple[str, int]] = []
+        for line in comp.lines:
+            if "while(" in line:
+                wm = _WHILE_RE.search(line)
+                cm = _COND_RE.search(line)
+                if wm and cm:
+                    cname = cm.group(1)
+                    tc = tc_cache.get(cname)
+                    if tc is None:
+                        cond = comps.get(cname)
+                        tc = tc_cache[cname] = \
+                            _trip_count(cond) if cond else 1
+                    es.append((wm.group(1), tc))
+                    es.append((cname, tc))
+                    continue
+            if "calls=" in line or "to_apply=" in line:
+                for rx in (_CALLS_RE, _TO_APPLY_RE):
+                    m = rx.search(line)
+                    if m:
+                        es.append((m.group(1), 1))
+        if es:
+            edges[name] = es
+    return edges
+
+
 def _multiplicities(comps: Dict[str, _Computation]) -> Dict[str, int]:
     """Execution multiplicity per computation (while bodies x trip count)."""
     entry = comps.get("__entry__")
-    mult: Dict[str, int] = {}
     if entry is None:
         return {name: 1 for name in comps}
-    mult[entry.name] = 1
+    edges = _call_edges(comps)
+    mult: Dict[str, int] = {entry.name: 1}
 
     # propagate through call sites breadth-first
     changed = True
@@ -169,29 +204,15 @@ def _multiplicities(comps: Dict[str, _Computation]) -> Dict[str, int]:
     while changed and passes < 50:
         changed = False
         passes += 1
-        for name, comp in comps.items():
+        for name in comps:
             if name == "__entry__" or name not in mult:
                 continue
             base = mult[name]
-            for line in comp.lines:
-                callees: List[Tuple[str, int]] = []
-                wm = _WHILE_RE.search(line)
-                cm = _COND_RE.search(line)
-                if wm and cm and "while(" in line:
-                    cond = comps.get(cm.group(1))
-                    tc = _trip_count(cond) if cond else 1
-                    callees.append((wm.group(1), tc))
-                    callees.append((cm.group(1), tc))
-                else:
-                    for rx in (_CALLS_RE, _TO_APPLY_RE):
-                        m = rx.search(line)
-                        if m:
-                            callees.append((m.group(1), 1))
-                for callee, k in callees:
-                    new = base * k
-                    if callee in comps and mult.get(callee, 0) < new:
-                        mult[callee] = new
-                        changed = True
+            for callee, k in edges.get(name, ()):
+                new = base * k
+                if callee in comps and mult.get(callee, 0) < new:
+                    mult[callee] = new
+                    changed = True
     return mult
 
 
@@ -226,8 +247,84 @@ def _parse_stp(line: str) -> Optional[List[Tuple[int, int]]]:
     return pairs
 
 
+_NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "iota", "reshape"}
+# elementwise/cheap ops: on TPU these fuse into producers/consumers, so
+# counting their operands would massively over-state HBM traffic (the
+# CPU host backend fuses far less aggressively than the TPU pipeline).
+_FUSED_ON_TPU = {
+    "add", "subtract", "multiply", "divide", "negate", "abs", "exponential",
+    "exponential-minus-one", "log", "log-plus-one", "rsqrt", "sqrt", "tanh",
+    "logistic", "sign", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
+    "round-nearest-even", "maximum", "minimum", "compare", "select", "and",
+    "or", "not", "xor", "clamp", "convert", "broadcast", "power", "is-finite",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic", "atan2",
+    "remainder", "map", "reverse", "real", "imag", "erf", "expm1", "log1p",
+    "popcnt", "clz", "slice", "pad", "concatenate", "copy", "transpose",
+    "reduce", "broadcast-in-dim", "stochastic-convert", "cbrt",
+}
+
+
+def _scan_stats(line: str, lm_groups, m: int, stats: HloOpStats,
+                shapes: Dict[str, str], kinds: Dict[str, str],
+                in_fusion_body: bool) -> bool:
+    """Per-line stats accumulation (both parse paths share this).
+
+    Returns True when the line is fully consumed (transpose / fusion /
+    convert / reshape bookkeeping ops) — collective extraction only
+    proceeds when this returns False.
+    """
+    _op_result, type_str, op_kind, rest = lm_groups
+
+    if op_kind == "dot":
+        fl = _dot_flops(line, type_str, shapes) * m
+        stats.flops += fl
+        sc = _line_scope(line)
+        stats.flops_by_scope[sc] = stats.flops_by_scope.get(sc, 0.0) + fl
+
+    # HBM-traffic estimate: each materialized tensor is written once
+    # (result bytes) and read about once downstream; parameter
+    # (weight) operands are charged at the consuming op.  Counting
+    # operand bytes of every op would double-count each fusion
+    # boundary and inflate traffic ~10x at CPU-fusion granularity.
+    if (not in_fusion_body and op_kind not in _NO_TRAFFIC
+            and op_kind not in _FUSED_ON_TPU):
+        rb, _ = parse_type_bytes(type_str)
+        pb = 0
+        for op_ref in _OPERANDS_RE.findall(rest.split(")")[0]):
+            if kinds.get(op_ref) == "parameter":
+                b, _d = parse_type_bytes(shapes.get(op_ref, ""))
+                pb += b
+        tb = (2 * rb + pb) * m
+        stats.bytes_accessed += tb
+        sc = _line_scope(line)
+        stats.bytes_by_scope[sc] = stats.bytes_by_scope.get(sc, 0.0) + tb
+
+    if op_kind in ("transpose", "copy") or op_kind.startswith("transpose"):
+        stats.n_transpose += 1
+        b, _ = parse_type_bytes(type_str)
+        stats.transpose_bytes += b * m
+        return True
+    if op_kind == "fusion":
+        stats.n_fusion += 1
+        return True
+    if op_kind == "convert":
+        stats.n_convert += 1
+        return True
+    if op_kind in ("reshape", "bitcast"):
+        stats.n_reshape += 1
+        return True
+    return False
+
+
 def parse_hlo(text: str, num_devices: int) -> Tuple[List[CollectiveEvent], HloOpStats]:
     """Extract collective events (+program stats) from compiled HLO text.
+
+    This is the per-event *reference* path (one `CollectiveEvent` per op
+    site); `parse_hlo_store` below is the batched fast path that emits the
+    same records straight into columnar form.  Equivalence between the two
+    is pinned by tests/test_ingest.py.
 
     Also accumulates *loop-aware* FLOP and traffic totals (stats.flops /
     stats.bytes_accessed): `compiled.cost_analysis()` counts while-loop
@@ -263,24 +360,6 @@ def parse_hlo(text: str, num_devices: int) -> Tuple[List[CollectiveEvent], HloOp
         shapes_by_comp[name] = table
         kinds_by_comp[name] = kinds
 
-    _NO_TRAFFIC = {"parameter", "constant", "get-tuple-element", "tuple",
-                   "bitcast", "after-all", "partition-id", "replica-id",
-                   "iota", "reshape"}
-    # elementwise/cheap ops: on TPU these fuse into producers/consumers, so
-    # counting their operands would massively over-state HBM traffic (the
-    # CPU host backend fuses far less aggressively than the TPU pipeline).
-    _FUSED_ON_TPU = {
-        "add", "subtract", "multiply", "divide", "negate", "abs", "exponential",
-        "exponential-minus-one", "log", "log-plus-one", "rsqrt", "sqrt", "tanh",
-        "logistic", "sign", "cosine", "sine", "floor", "ceil", "round-nearest-afz",
-        "round-nearest-even", "maximum", "minimum", "compare", "select", "and",
-        "or", "not", "xor", "clamp", "convert", "broadcast", "power", "is-finite",
-        "shift-left", "shift-right-logical", "shift-right-arithmetic", "atan2",
-        "remainder", "map", "reverse", "real", "imag", "erf", "expm1", "log1p",
-        "popcnt", "clz", "slice", "pad", "concatenate", "copy", "transpose",
-        "reduce", "broadcast-in-dim", "stochastic-convert", "cbrt",
-    }
-
     for name, comp in comps.items():
         if name == "__entry__":
             continue
@@ -293,46 +372,10 @@ def parse_hlo(text: str, num_devices: int) -> Tuple[List[CollectiveEvent], HloOp
             lm = _OPLINE_RE.match(line)
             if not lm:
                 continue
+            if _scan_stats(line, lm.groups(), m, stats, shapes, kinds,
+                           in_fusion_body):
+                continue
             op_result, type_str, op_kind, rest = lm.groups()
-
-            if op_kind == "dot":
-                fl = _dot_flops(line, type_str, shapes) * m
-                stats.flops += fl
-                sc = _line_scope(line)
-                stats.flops_by_scope[sc] = stats.flops_by_scope.get(sc, 0.0) + fl
-
-            # HBM-traffic estimate: each materialized tensor is written once
-            # (result bytes) and read about once downstream; parameter
-            # (weight) operands are charged at the consuming op.  Counting
-            # operand bytes of every op would double-count each fusion
-            # boundary and inflate traffic ~10x at CPU-fusion granularity.
-            if (not in_fusion_body and op_kind not in _NO_TRAFFIC
-                    and op_kind not in _FUSED_ON_TPU):
-                rb, _ = parse_type_bytes(type_str)
-                pb = 0
-                for op_ref in _OPERANDS_RE.findall(rest.split(")")[0]):
-                    if kinds.get(op_ref) == "parameter":
-                        b, _d = parse_type_bytes(shapes.get(op_ref, ""))
-                        pb += b
-                tb = (2 * rb + pb) * m
-                stats.bytes_accessed += tb
-                sc = _line_scope(line)
-                stats.bytes_by_scope[sc] = stats.bytes_by_scope.get(sc, 0.0) + tb
-
-            if op_kind in ("transpose", "copy") or op_kind.startswith("transpose"):
-                stats.n_transpose += 1
-                b, _ = parse_type_bytes(type_str)
-                stats.transpose_bytes += b * m
-                continue
-            if op_kind == "fusion":
-                stats.n_fusion += 1
-                continue
-            if op_kind == "convert":
-                stats.n_convert += 1
-                continue
-            if op_kind in ("reshape", "bitcast"):
-                stats.n_reshape += 1
-                continue
 
             base = op_kind[:-6] if op_kind.endswith("-start") else op_kind
             if base not in COLLECTIVE_KINDS:
@@ -388,3 +431,284 @@ def _operand_bytes(rest: str, type_str: str, kind: str, line: str) -> int:
     if type_str.strip().startswith("(") and kind == "all-reduce":
         return result_bytes // 2
     return result_bytes
+
+
+# --------------------------------------------------------------------------
+# single-pass columnar fast path
+# --------------------------------------------------------------------------
+
+# quick substring prescreen: a line can only be a collective op site if one
+# of these appears (C-level scan, no regex)
+_COLL_HINT_RE = re.compile(
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute|"
+    r"collective-broadcast")
+
+# one combined regex matches the whole collective op line — name, (tuple)
+# type, kind, async suffix, and the attr tail — in a single pass, replacing
+# the generic op-line match + kind dispatch + suffix string surgery of the
+# reference path.  The lookbehind keeps the kind from matching inside a
+# longer identifier (parity with `_OPLINE_RE`'s greedy kind capture).
+_FAST_COLLECTIVE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*(?<![\w.\-])"
+    r"(all-reduce|all-gather|reduce-scatter|ragged-all-to-all|all-to-all|"
+    r"collective-permute|collective-broadcast)(-start|-done)?\((.*)$")
+
+
+def parse_hlo_store(text: str, num_devices: int):
+    """Single-pass fast path: collective op lines -> `TraceStore` columns.
+
+    Equivalent to `parse_hlo` + `TraceStore.from_events` but ~an order of
+    magnitude faster at the 100k-site scale: each collective line is
+    consumed by ONE combined compiled regex and appended straight into
+    column builders — no `CollectiveEvent` dataclass per site, and every
+    repeated payload (op_name metadata, `replica_groups=...` attr text,
+    type strings, permute pair lists) is interned so the expensive decode
+    (iota resolution, type-byte arithmetic, scope splitting) runs once per
+    *unique* string instead of once per site.  Derived columns (link class,
+    wire bytes, est time, semantic, ...) are left blank for
+    `costmodel.annotate_store` / `attribution.attribute_store`.
+
+    Returns `(store, stats)` with `stats` identical to the reference path.
+    """
+    from repro.core.attribution import split_op_name
+    from repro.core.store import Categorical, TraceStore
+
+    comps = _split_computations(text)
+    mult = _multiplicities(comps)
+    stats = HloOpStats()
+
+    # -- prepass: fusion bodies + symbol tables.  The full table is only
+    # needed for dot-FLOP lhs lookups; otherwise parameters (operand-byte
+    # charging) and fusion markers are the only rows ever read from it.
+    shapes_by_comp: Dict[str, Dict[str, str]] = {}
+    kinds_by_comp: Dict[str, Dict[str, str]] = {}
+    fusion_bodies: set = set()
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        table: Dict[str, str] = {}
+        kinds: Dict[str, str] = {}
+        full = any(" dot(" in ln for ln in comp.lines)
+        for line in comp.lines:
+            if not full and "parameter(" not in line and "fusion(" not in line:
+                continue
+            if "/*" in line:
+                line = _COMMENT_RE.sub("", line)
+            lm = _OPLINE_RE.match(line)
+            if lm:
+                table[lm.group(1)] = lm.group(2)
+                kinds[lm.group(1)] = lm.group(3)
+                if lm.group(3) == "fusion":
+                    fm = _CALLS_RE.search(line)
+                    if fm:
+                        fusion_bodies.add(fm.group(1))
+        shapes_by_comp[name] = table
+        kinds_by_comp[name] = kinds
+
+    # -- column builders + interning state ----------------------------------
+    names: List[str] = []
+    operand_b: List[int] = []
+    result_b: List[int] = []
+    mults: List[int] = []
+    gsizes: List[int] = []
+    ngroups_l: List[int] = []
+    channels: List[int] = []
+    asyncs: List[bool] = []
+    kind_codes: List[int] = []
+    dtype_codes: List[int] = []
+    comp_codes: List[int] = []
+    op_codes: List[int] = []
+    group_code: List[int] = []
+    stp_code: List[int] = []
+
+    kind_index: Dict[str, int] = {}
+    kind_vocab: List[str] = []
+    dtype_index: Dict[str, int] = {}
+    dtype_vocab: List[str] = []
+    comp_index: Dict[str, int] = {}
+    comp_vocab: List[str] = []
+    op_index: Dict[str, int] = {}
+    op_vocab: List[str] = []
+    scope_by_op: List[str] = []        # stats scope, parallel to op_vocab
+    type_cache: Dict[str, Tuple[int, int, bool]] = {}   # -> (bytes, dtc, tuple?)
+    pbytes_cache: Dict[str, int] = {}                   # param type -> bytes
+    rg_cache: Dict[Optional[str], Tuple[int, int, int, int]] = {}
+    group_tables: List[List[List[int]]] = []
+    stp_cache: Dict[str, int] = {}
+    stp_tables: List[List[Tuple[int, int]]] = []
+
+    coll_search = _COLL_HINT_RE.search
+    fast_match = _FAST_COLLECTIVE_RE.match
+    opline_match = _OPLINE_RE.match
+
+    for name, comp in comps.items():
+        if name == "__entry__":
+            continue
+        m = mult.get(name, 1)
+        shapes = shapes_by_comp.get(name, {})
+        kinds = kinds_by_comp.get(name, {})
+        in_fusion_body = name in fusion_bodies
+        cc = -1                        # interned on first emitted event
+        for line in comp.lines:
+            if "/*" in line:
+                line = _COMMENT_RE.sub("", line)
+            cm = fast_match(line) if coll_search(line) else None
+            if cm is None:
+                lm = opline_match(line)
+                if lm is None:
+                    continue
+                _scan_stats(line, lm.groups(), m, stats, shapes, kinds,
+                            in_fusion_body)
+                continue
+
+            op_result, type_str, base, suffix, rest = cm.groups()
+
+            # type bytes + dtype (interned per unique type string)
+            tent = type_cache.get(type_str)
+            if tent is None:
+                rb, dt = parse_type_bytes(type_str)
+                dtc = dtype_index.get(dt)
+                if dtc is None:
+                    dtc = dtype_index[dt] = len(dtype_vocab)
+                    dtype_vocab.append(dt)
+                tent = type_cache[type_str] = \
+                    (rb, dtc, type_str.strip().startswith("("))
+            rb, dtc, is_tuple = tent
+
+            # op_name metadata (interned; scope resolved once per entry)
+            md = _METADATA_RE.search(rest)
+            op_name = md.group(1) if md else ""
+            oc = op_index.get(op_name)
+            if oc is None:
+                oc = op_index[op_name] = len(op_vocab)
+                op_vocab.append(op_name)
+                scope_by_op.append(split_op_name(op_name)[0] if op_name else "")
+
+            # stats contribution (collectives are never traffic-exempt)
+            if not in_fusion_body:
+                pb = 0
+                for op_ref in _OPERANDS_RE.findall(rest.split(")")[0]):
+                    if kinds.get(op_ref) == "parameter":
+                        ts = shapes.get(op_ref, "")
+                        b = pbytes_cache.get(ts)
+                        if b is None:
+                            b = pbytes_cache[ts] = parse_type_bytes(ts)[0]
+                        pb += b
+                tb = (2 * rb + pb) * m
+                stats.bytes_accessed += tb
+                sc = scope_by_op[oc]
+                stats.bytes_by_scope[sc] = \
+                    stats.bytes_by_scope.get(sc, 0.0) + tb
+
+            if suffix == "-done":       # async completion marker: stats only
+                continue
+
+            # replica groups, interned on the raw attr text
+            im = _IOTA_RG_RE.search(rest)
+            if im is not None:
+                rkey = im.group(0)
+                gent = rg_cache.get(rkey)
+                if gent is None:
+                    g, s = int(im.group(1)), int(im.group(2))
+                    dims = [int(x) for x in im.group(3).split(",")]
+                    perm = [int(x) for x in im.group(4).split(",")] \
+                        if im.group(4) else None
+                    groups = resolve_iota_groups(g, s, dims, perm)
+                    gsz = max(len(gg) for gg in groups) if groups else 1
+                    gc = len(group_tables)
+                    group_tables.append(groups)
+                    gent = rg_cache[rkey] = (gc, gsz, len(groups), s)
+            else:
+                em = _EXPLICIT_RG_RE.search(rest)
+                rkey = em.group(0) if em is not None else None
+                gent = rg_cache.get(rkey)
+                if gent is None:
+                    groups = _parse_replica_groups(rkey or "", num_devices)
+                    gsz = max(len(gg) for gg in groups) if groups else 1
+                    gc = len(group_tables)
+                    group_tables.append(groups)
+                    gent = rg_cache[rkey] = (gc, gsz, len(groups), 0)
+            gc, gsz, ng, iota_s = gent
+
+            # permute pairs, interned on the raw attr text
+            sc_code = -1
+            if base == "collective-permute":
+                sm = _STP_RE.search(rest)
+                if sm is not None and sm.group(1):
+                    skey = sm.group(0)
+                    sc_code = stp_cache.get(skey, -1)
+                    if sc_code < 0:
+                        pairs = _parse_stp(rest)
+                        sc_code = stp_cache[skey] = len(stp_tables)
+                        stp_tables.append(pairs)
+
+            # payload bytes (same conventions as `_operand_bytes`)
+            if base == "all-gather":
+                ob = rb
+            elif base == "reduce-scatter":
+                ob = rb * iota_s if iota_s else rb
+            elif is_tuple and base == "all-reduce":
+                ob = rb // 2
+            else:
+                ob = rb
+
+            ch = _CHANNEL_RE.search(rest)
+
+            if cc < 0:
+                cc = comp_index.get(name, -1)
+                if cc < 0:
+                    cc = comp_index[name] = len(comp_vocab)
+                    comp_vocab.append(name)
+            names.append(op_result)
+            kc = kind_index.get(base)
+            if kc is None:
+                kc = kind_index[base] = len(kind_vocab)
+                kind_vocab.append(base)
+            kind_codes.append(kc)
+            dtype_codes.append(dtc)
+            comp_codes.append(cc)
+            op_codes.append(oc)
+            operand_b.append(ob)
+            result_b.append(rb)
+            mults.append(m)
+            gsizes.append(gsz)
+            ngroups_l.append(ng)
+            channels.append(int(ch.group(1)) if ch else -1)
+            asyncs.append(suffix == "-start")
+            group_code.append(gc)
+            stp_code.append(sc_code)
+
+    n = len(names)
+    num = {
+        "operand_bytes": np.asarray(operand_b, dtype=np.int64),
+        "result_bytes": np.asarray(result_b, dtype=np.int64),
+        "multiplicity": np.asarray(mults, dtype=np.int64),
+        "group_size": np.asarray(gsizes, dtype=np.int64),
+        "num_groups": np.asarray(ngroups_l, dtype=np.int64),
+        "channel_id": np.asarray(channels, dtype=np.int64),
+        "async_start": np.asarray(asyncs, dtype=np.bool_),
+        "wire_bytes_per_device": np.zeros(n, dtype=np.float64),
+        "est_time_s": np.zeros(n, dtype=np.float64),
+    }
+    cat = {
+        "kind": Categorical(np.asarray(kind_codes, dtype=np.int32), kind_vocab),
+        "dtype": Categorical(np.asarray(dtype_codes, dtype=np.int32),
+                             dtype_vocab),
+        "computation": Categorical(np.asarray(comp_codes, dtype=np.int32),
+                                   comp_vocab),
+        "op_name": Categorical(np.asarray(op_codes, dtype=np.int32), op_vocab),
+        "link_class": Categorical.constant(n),
+        "semantic": Categorical.constant(n),
+        "protocol": Categorical.constant(n),
+        "jax_prim": Categorical.constant(n),
+        "scope": Categorical.constant(n),
+    }
+    store = TraceStore(
+        n, num, cat, names,
+        group_tables=group_tables,
+        group_code=np.asarray(group_code, dtype=np.int32),
+        stp_tables=stp_tables,
+        stp_code=np.asarray(stp_code, dtype=np.int32),
+        axes_tables=[()] if n else [],
+        axes_code=np.zeros(n, dtype=np.int32))
+    return store, stats

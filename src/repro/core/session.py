@@ -6,8 +6,15 @@ bindings.  A `TraceSession` makes that shape first-class: collect traces
 from several configurations, persist them as one artifact (compact JSON or
 compressed npz of the columnar stores), and render n-way comparison views.
 
+Bulk ingest (`TraceSession.from_hlo`) runs the columnar pipeline over many
+HLO dumps, fanning the files out across worker processes — ingest is pure
+CPU-bound Python/numpy, so a sweep of N configurations parses in roughly
+the time of its largest member.
+
 CLI:
     python -m repro.core.session demo  [--out PATH] [--format json|npz]
+    python -m repro.core.session ingest OUT FILE [FILE ...] [--mesh 2,4]
+                                        [--axes data,model] [--workers N]
     python -m repro.core.session show  PATH
     python -m repro.core.session table PATH [--by kind_link|semantic] \\
                                             [--metric bytes|time|count]
@@ -19,12 +26,13 @@ import dataclasses
 import json
 import os
 import sys
-from typing import Dict, Iterator, List, Optional, Sequence
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core.events import HloOpStats, Trace
 from repro.core.store import TraceStore
+from repro.core.topology import Hardware, MeshSpec, V5E
 
 _TRACE_SCALARS = ("hlo_flops", "hlo_bytes", "per_device_memory_bytes",
                   "argument_bytes", "output_bytes")
@@ -62,8 +70,32 @@ def _trace_from_meta(meta: Dict[str, object], store: TraceStore) -> Trace:
 
 
 # --------------------------------------------------------------------------
-# the session
+# bulk ingest — many HLO dumps -> one session, fanned out across processes
 # --------------------------------------------------------------------------
+
+def _ingest_one(job) -> Trace:
+    """Worker: ingest one (label, hlo_text) through the columnar pipeline.
+
+    Module-level so it pickles into `ProcessPoolExecutor` workers; the
+    returned `Trace` ships back as its columnar store (rows stay lazy).
+    """
+    label, text, mesh, hw, engine = job
+    from repro.core.tracer import trace_from_hlo
+    return trace_from_hlo(text, mesh, label=label, hw=hw, engine=engine)
+
+
+def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str) -> List:
+    jobs = []
+    for it in items:
+        if isinstance(it, (tuple, list)):
+            label, text = it
+        else:
+            label = os.path.splitext(os.path.basename(str(it)))[0]
+            with open(it) as f:
+                text = f.read()
+        jobs.append((label, text, mesh, hw, engine))
+    return jobs
+
 
 class TraceSession:
     """An ordered, label-addressed collection of traces."""
@@ -126,6 +158,47 @@ class TraceSession:
     def diff(self, label_a: str, label_b: str, by: str = "kind_link") -> str:
         from repro.core.diff import render_diff
         return render_diff(self.get(label_a), self.get(label_b), by=by)
+
+    # -- bulk ingest ---------------------------------------------------------
+
+    @classmethod
+    def from_hlo(cls, name: str,
+                 items: Sequence[Union[str, Tuple[str, str]]],
+                 mesh: MeshSpec, *, hw: Hardware = V5E,
+                 engine: str = "columnar",
+                 max_workers: Optional[int] = None) -> "TraceSession":
+        """Ingest many HLO dumps into one session, in parallel.
+
+        `items` are either `(label, hlo_text)` pairs or paths to HLO text
+        files (label = file stem).  Each file runs the full columnar
+        pipeline (parse -> annotate -> attribute) in its own worker
+        process; results come back as columnar stores.  Falls back to
+        serial ingest when the pool is unavailable (restricted
+        environments) or for a single file.
+        """
+        jobs = _ingest_jobs(items, mesh, hw, engine)
+        if max_workers is None:
+            max_workers = min(len(jobs), os.cpu_count() or 1)
+        traces: Optional[List[Trace]] = None
+        if max_workers > 1 and len(jobs) > 1:
+            import multiprocessing
+            import pickle
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+            try:
+                # spawn, not fork: the parent often has jax loaded (and so
+                # multiple live threads) by the time a sweep is ingested,
+                # and forking a multithreaded process can deadlock workers.
+                with ProcessPoolExecutor(
+                        max_workers=max_workers,
+                        mp_context=multiprocessing.get_context("spawn")) as ex:
+                    traces = list(ex.map(_ingest_one, jobs))
+            except (BrokenProcessPool, pickle.PicklingError, ImportError,
+                    OSError):
+                traces = None     # pool unavailable here -> serial fallback
+        if traces is None:
+            traces = [_ingest_one(j) for j in jobs]
+        return cls(name, traces)
 
     # -- persistence ---------------------------------------------------------
 
@@ -209,6 +282,16 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--format", choices=("json", "npz"), default=None)
     p.add_argument("--sites", type=int, default=2000)
 
+    p = sub.add_parser("ingest", help="parse HLO dump files into a session "
+                                      "(parallel columnar ingest)")
+    p.add_argument("out", help="output session path (.json or .npz)")
+    p.add_argument("files", nargs="+", help="HLO text files")
+    p.add_argument("--mesh", default="2,4",
+                   help="mesh shape, comma-separated (default 2,4)")
+    p.add_argument("--axes", default="data,model",
+                   help="mesh axis names, comma-separated")
+    p.add_argument("--workers", type=int, default=None)
+
     p = sub.add_parser("show", help="per-trace summaries of a saved session")
     p.add_argument("path")
 
@@ -241,6 +324,23 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         print(loaded.table())
         print()
         print(loaded.table(by="semantic", metric="time"))
+        return 0
+
+    if args.cmd == "ingest":
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = tuple(args.axes.split(","))
+        if len(shape) != len(axes):
+            print("error: --mesh and --axes must have the same rank",
+                  file=sys.stderr)
+            return 2
+        mesh = MeshSpec(shape, axes)
+        sess = TraceSession.from_hlo(
+            os.path.splitext(os.path.basename(args.out))[0],
+            args.files, mesh, max_workers=args.workers)
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        path = sess.save(args.out)
+        print(f"session '{sess.name}': ingested {len(sess)} traces -> {path}")
+        _print_totals(sess)
         return 0
 
     try:

@@ -1,15 +1,23 @@
 """Columnar trace storage — struct-of-arrays over numpy.
 
-The per-event dataclass list is the right *construction* format (the HLO
-parser emits one `CollectiveEvent` per op site, the cost model annotates it
-in place), but it is the wrong *aggregation* format: every Table II rollup,
+The per-event dataclass list is the right *construction* format for small
+traces, but the wrong *aggregation* format: every Table II rollup,
 comm-matrix assembly, and detector scan walks Python objects attribute by
 attribute.  INAM-style cross-layer profilers solve this with columnar
 stores; we do the same.  `TraceStore` holds one numpy array per numeric
 field and interned categorical codes for the string fields (kind, link
-class, semantic, ...), so aggregations become `np.bincount` over composite
-codes instead of Python loops — 1-2 orders of magnitude faster at the
-100k-event scale the paper's experiments produce.
+class, semantic, op_name, ...), so aggregations become `np.bincount` over
+composite codes instead of Python loops — 1-2 orders of magnitude faster
+at the 100k-event scale the paper's experiments produce.
+
+The irregular per-row payloads are *deduplicated*: replica groups, permute
+pairs, and mesh-axes tuples repeat heavily (unrolled loops stamp the same
+`replica_groups=[G,S]<=[dims]` attr thousands of times), so the store keeps
+one table of unique values per payload plus an int32 code per row.  This is
+what makes whole-pipeline batching possible: the cost model resolves
+topology once per unique group table (`costmodel.annotate_store`) and
+attribution runs its regex cascade once per unique op_name
+(`attribution.attribute_store`), both broadcasting results through codes.
 
 `CollectiveEvent` remains the row view: `store.row(i)` / `store.rows()`
 materialize dataclass rows, and `Trace` keeps exposing `.events` so every
@@ -24,7 +32,7 @@ import numpy as np
 
 from repro.core.events import CollectiveEvent
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # numeric columns: (name, dtype)
 _NUM_COLS: Tuple[Tuple[str, object], ...] = (
@@ -42,7 +50,7 @@ _NUM_COLS: Tuple[Tuple[str, object], ...] = (
 # interned string columns
 _CAT_COLS: Tuple[str, ...] = (
     "kind", "link_class", "semantic", "protocol", "jax_prim", "scope",
-    "dtype", "computation",
+    "dtype", "computation", "op_name",
 )
 
 
@@ -66,6 +74,13 @@ class Categorical:
             codes[i] = code
         return cls(codes, list(index))
 
+    @classmethod
+    def constant(cls, n: int, value: str = "") -> "Categorical":
+        """A column of `n` identical values (the un-annotated placeholder)."""
+        if n == 0:
+            return cls(np.empty(0, dtype=np.int32), [])
+        return cls(np.zeros(n, dtype=np.int32), [value])
+
     def __len__(self) -> int:
         return len(self.codes)
 
@@ -88,33 +103,84 @@ class Categorical:
             return np.zeros(len(self.codes), dtype=bool)
         return np.isin(self.codes, np.fromiter(want, dtype=np.int32))
 
+    def remap(self, fn) -> "Categorical":
+        """New categorical applying `fn` once per *vocab entry* (not per row),
+        merging entries that map to the same output string."""
+        return self.remap_table([fn(v) for v in self.vocab])
+
+    def remap_table(self, table: Sequence[str]) -> "Categorical":
+        """New categorical with vocab entry i replaced by `table[i]`
+        (entries mapping to the same output are merged)."""
+        remap, merged = build_remap(table)
+        codes = remap[self.codes] if len(table) else \
+            np.empty(0, dtype=np.int32)
+        return Categorical(codes, merged)
+
+
+def _intern(index: Dict, key, table: List, value_fn) -> int:
+    code = index.get(key)
+    if code is None:
+        code = index[key] = len(table)
+        table.append(value_fn())
+    return code
+
+
+def build_remap(entries: Sequence) -> Tuple[np.ndarray, List]:
+    """Intern `entries` in first-seen order: returns (int32 map of
+    len(entries), merged vocab) with `vocab[map[i]] == entries[i]`.
+
+    The shared core of every vocab-level broadcast (Categorical.remap,
+    the batched cost model's link classes, attribution's semantic labels).
+    """
+    index: Dict = {}
+    vocab: List = []
+    table = np.empty(max(len(entries), 1), dtype=np.int32)
+    for i, v in enumerate(entries):
+        j = index.get(v)
+        if j is None:
+            j = index[v] = len(vocab)
+            vocab.append(v)
+        table[i] = j
+    return table, vocab
+
 
 class TraceStore:
     """Struct-of-arrays event store backing a `Trace`.
 
     Numeric fields are numpy columns; string fields are `Categorical`
-    (codes + vocab); the irregular per-row payloads (replica groups,
-    permute pairs, mesh axes, names) stay as Python lists — they are only
-    touched at row-materialization and comm-matrix-edge-build time.
+    (codes + vocab); the irregular per-row payloads are deduplicated into
+    unique-value tables addressed by int32 codes:
+
+      * `group_tables[group_code[i]]`  — replica groups of row i,
+      * `stp_tables[stp_code[i]]`      — permute pairs (code -1 = none),
+      * `axes_tables[axes_code[i]]`    — mesh-axes tuple of row i.
+
+    The per-row list views (`replica_groups`, `source_target_pairs`,
+    `axes`, `op_names`) are materialized lazily for compatibility.
     """
 
     def __init__(self, n: int, num: Dict[str, np.ndarray],
                  cat: Dict[str, Categorical],
-                 names: List[str], op_names: List[str],
-                 axes: List[Tuple[str, ...]],
-                 replica_groups: List[List[List[int]]],
-                 source_target_pairs: List[Optional[List[Tuple[int, int]]]]):
+                 names: List[str],
+                 group_tables: List[List[List[int]]], group_code: np.ndarray,
+                 stp_tables: List[List[Tuple[int, int]]], stp_code: np.ndarray,
+                 axes_tables: List[Tuple[str, ...]], axes_code: np.ndarray):
         self.n = n
         for col, _dt in _NUM_COLS:
             setattr(self, col, num[col])
         for col in _CAT_COLS:
             setattr(self, col, cat[col])
         self.names = names
-        self.op_names = op_names
-        self.axes = axes
-        self.replica_groups = replica_groups
-        self.source_target_pairs = source_target_pairs
+        self.group_tables = group_tables
+        self.group_code = np.asarray(group_code, dtype=np.int32)
+        self.stp_tables = stp_tables
+        self.stp_code = np.asarray(stp_code, dtype=np.int32)
+        self.axes_tables = axes_tables
+        self.axes_code = np.asarray(axes_code, dtype=np.int32)
         self._edges: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        self._rg_rows: Optional[List[List[List[int]]]] = None
+        self._stp_rows: Optional[List] = None
+        self._axes_rows: Optional[List[Tuple[str, ...]]] = None
 
     # ---- construction ------------------------------------------------------
 
@@ -128,19 +194,86 @@ class TraceStore:
             dtype=dt, count=n) for col, dt in _NUM_COLS}
         cat = {col: Categorical.from_values([getattr(e, col) for e in evs])
                for col in _CAT_COLS}
-        return cls(
-            n, num, cat,
-            names=[e.name for e in evs],
-            op_names=[e.op_name for e in evs],
-            axes=[tuple(e.axes) for e in evs],
-            replica_groups=[e.replica_groups for e in evs],
-            source_target_pairs=[e.source_target_pairs for e in evs])
+
+        # intern the irregular payloads (id() front-cache: parsers and synth
+        # reuse the same group-list objects across many events)
+        g_idx: Dict = {}
+        g_ids: Dict[int, int] = {}
+        group_tables: List[List[List[int]]] = []
+        group_code = np.empty(n, dtype=np.int32)
+        s_idx: Dict = {}
+        stp_tables: List[List[Tuple[int, int]]] = []
+        stp_code = np.empty(n, dtype=np.int32)
+        a_idx: Dict = {}
+        axes_tables: List[Tuple[str, ...]] = []
+        axes_code = np.empty(n, dtype=np.int32)
+        for i, e in enumerate(evs):
+            gc = g_ids.get(id(e.replica_groups))
+            if gc is None:
+                key = tuple(tuple(g) for g in e.replica_groups)
+                gc = _intern(g_idx, key, group_tables, lambda: e.replica_groups)
+                g_ids[id(e.replica_groups)] = gc
+            group_code[i] = gc
+            if e.source_target_pairs:
+                key = tuple(e.source_target_pairs)
+                stp_code[i] = _intern(s_idx, key, stp_tables,
+                                      lambda: e.source_target_pairs)
+            else:
+                stp_code[i] = -1
+            axes_code[i] = _intern(a_idx, tuple(e.axes), axes_tables,
+                                   lambda: tuple(e.axes))
+        return cls(n, num, cat, names=[e.name for e in evs],
+                   group_tables=group_tables, group_code=group_code,
+                   stp_tables=stp_tables, stp_code=stp_code,
+                   axes_tables=axes_tables, axes_code=axes_code)
+
+    # ---- per-row compatibility views ---------------------------------------
+
+    @property
+    def replica_groups(self) -> List[List[List[int]]]:
+        if self._rg_rows is None:
+            tables = self.group_tables
+            self._rg_rows = [tables[c] for c in self.group_code]
+        return self._rg_rows
+
+    @property
+    def source_target_pairs(self) -> List[Optional[List[Tuple[int, int]]]]:
+        if self._stp_rows is None:
+            tables = self.stp_tables
+            self._stp_rows = [None if c < 0 else tables[c]
+                              for c in self.stp_code]
+        return self._stp_rows
+
+    @property
+    def axes(self) -> List[Tuple[str, ...]]:
+        if self._axes_rows is None:
+            tables = self.axes_tables
+            self._axes_rows = [tables[c] for c in self.axes_code]
+        return self._axes_rows
+
+    @property
+    def op_names(self) -> List[str]:
+        return self.op_name.values()
+
+    def set_axes(self, axes_tables: List[Tuple[str, ...]],
+                 axes_code: np.ndarray) -> None:
+        """Replace the axes payload (used by `costmodel.annotate_store`)."""
+        self.axes_tables = axes_tables
+        self.axes_code = np.asarray(axes_code, dtype=np.int32)
+        self._axes_rows = None
 
     # ---- row views ---------------------------------------------------------
 
     def row(self, i: int) -> CollectiveEvent:
-        """Materialize row `i` as the classic dataclass view."""
+        """Materialize row `i` as the classic dataclass view.
+
+        The mutable payloads (replica groups, permute pairs) are *copied*
+        out of the shared dedup tables: `Trace` documents an
+        edit-rows-in-place + `invalidate()` workflow, and an edit through
+        an aliased table would silently rewrite every sibling row.
+        """
         ch = int(self.channel_id[i])
+        sc = self.stp_code[i]
         return CollectiveEvent(
             name=self.names[i],
             kind=self.kind.value(i),
@@ -148,16 +281,17 @@ class TraceStore:
             operand_bytes=int(self.operand_bytes[i]),
             result_bytes=int(self.result_bytes[i]),
             dtype=self.dtype.value(i),
-            replica_groups=self.replica_groups[i],
+            replica_groups=[list(g)
+                            for g in self.group_tables[self.group_code[i]]],
             group_size=int(self.group_size[i]),
             num_groups=int(self.num_groups[i]),
-            op_name=self.op_names[i],
+            op_name=self.op_name.value(i),
             computation=self.computation.value(i),
             multiplicity=int(self.multiplicity[i]),
             channel_id=None if ch < 0 else ch,
-            source_target_pairs=self.source_target_pairs[i],
+            source_target_pairs=None if sc < 0 else list(self.stp_tables[sc]),
             link_class=self.link_class.value(i),
-            axes=self.axes[i],
+            axes=self.axes_tables[self.axes_code[i]],
             semantic=self.semantic.value(i),
             jax_prim=self.jax_prim.value(i),
             scope=self.scope.value(i),
@@ -237,20 +371,11 @@ class TraceStore:
 
     def by_semantic(self) -> Dict[str, Dict[str, float]]:
         # empty semantic rolls up as "other" (matches the per-event path)
-        mapped = [v or "other" for v in self.semantic.vocab]
-        remap_index: Dict[str, int] = {}
-        remap = np.empty(max(len(mapped), 1), dtype=np.int64)
-        merged: List[str] = []
-        for i, lab in enumerate(mapped):
-            if lab not in remap_index:
-                remap_index[lab] = len(merged)
-                merged.append(lab)
-            remap[i] = remap_index[lab]
         if self.n == 0:
             return {}
-        codes = remap[self.semantic.codes]
-        uniq, inv = np.unique(codes, return_inverse=True)
-        labels = [merged[c] for c in uniq]
+        merged = self.semantic.remap(lambda v: v or "other")
+        uniq, inv = np.unique(merged.codes, return_inverse=True)
+        labels = [merged.vocab[c] for c in uniq]
         return self._aggregate(inv, labels)
 
     def by_sem_kind_link(self) -> Dict[str, Dict[str, float]]:
@@ -264,32 +389,47 @@ class TraceStore:
         """Directed (src, dst, bytes) edge arrays for the comm matrix.
 
         Ring collectives contribute neighbor edges within each replica
-        group; permutes follow their explicit source->target pairs.  Built
-        once per store and cached — `np.add.at` scatters the whole edge
-        list in one call.
+        group; permutes follow their explicit source->target pairs.  Rows
+        sharing a group/pair table are folded first (their per-row weights
+        are bincount-summed per table code), so each unique topology emits
+        its edges once.  Built once per store and cached — `np.add.at`
+        scatters the whole edge list in one call.
         """
         if self._edges is None:
             srcs: List[np.ndarray] = []
             dsts: List[np.ndarray] = []
             ws: List[np.ndarray] = []
-            for i in range(self.n):
-                mult = float(self.multiplicity[i])
-                stp = self.source_target_pairs[i]
-                if stp:
-                    pairs = np.asarray(stp, dtype=np.int64)
+            stp_mask = self.stp_code >= 0
+            ring_mask = ~stp_mask
+            # ring rows: weight = wire_bytes_per_device x multiplicity,
+            # summed over rows sharing the same group table
+            if ring_mask.any():
+                w_ring = np.bincount(
+                    self.group_code[ring_mask],
+                    weights=(self.wire_bytes_per_device
+                             * self.weights)[ring_mask],
+                    minlength=len(self.group_tables))
+                for gc in np.flatnonzero(w_ring):
+                    per_link = float(w_ring[gc])
+                    for group in self.group_tables[gc]:
+                        if len(group) <= 1:
+                            continue
+                        arr = np.asarray(group, dtype=np.int64)
+                        srcs.append(arr)
+                        dsts.append(np.roll(arr, -1))
+                        ws.append(np.full(len(arr), per_link))
+            # permute rows: weight = operand_bytes x multiplicity per pair
+            if stp_mask.any():
+                w_stp = np.bincount(
+                    self.stp_code[stp_mask],
+                    weights=(self.operand_bytes.astype(np.float64)
+                             * self.weights)[stp_mask],
+                    minlength=len(self.stp_tables))
+                for sc in np.flatnonzero(w_stp):
+                    pairs = np.asarray(self.stp_tables[sc], dtype=np.int64)
                     srcs.append(pairs[:, 0])
                     dsts.append(pairs[:, 1])
-                    ws.append(np.full(len(pairs),
-                                      float(self.operand_bytes[i]) * mult))
-                    continue
-                per_link = float(self.wire_bytes_per_device[i]) * mult
-                for group in self.replica_groups[i]:
-                    if len(group) <= 1:
-                        continue
-                    arr = np.asarray(group, dtype=np.int64)
-                    srcs.append(arr)
-                    dsts.append(np.roll(arr, -1))
-                    ws.append(np.full(len(arr), per_link))
+                    ws.append(np.full(len(pairs), float(w_stp[sc])))
             if srcs:
                 self._edges = (np.concatenate(srcs), np.concatenate(dsts),
                                np.concatenate(ws))
@@ -300,6 +440,17 @@ class TraceStore:
 
     # ---- serialization -----------------------------------------------------
 
+    def _payload_dict(self) -> Dict[str, object]:
+        return {
+            "names": self.names,
+            "group_tables": self.group_tables,
+            "group_code": self.group_code.tolist(),
+            "stp_tables": [[list(p) for p in t] for t in self.stp_tables],
+            "stp_code": self.stp_code.tolist(),
+            "axes_tables": [list(a) for a in self.axes_tables],
+            "axes_code": self.axes_code.tolist(),
+        }
+
     def to_dict(self) -> Dict[str, object]:
         """Compact JSON-able dict (exact integer round-trip)."""
         return {
@@ -309,42 +460,81 @@ class TraceStore:
             "cat": {col: {"vocab": getattr(self, col).vocab,
                           "codes": getattr(self, col).codes.tolist()}
                     for col in _CAT_COLS},
-            "names": self.names,
-            "op_names": self.op_names,
-            "axes": [list(a) for a in self.axes],
-            "replica_groups": self.replica_groups,
-            "source_target_pairs": [
-                None if p is None else [list(pair) for pair in p]
-                for p in self.source_target_pairs],
+            **self._payload_dict(),
         }
 
     @classmethod
+    def _payload_from(cls, d: Dict[str, object]):
+        return dict(
+            names=list(d["names"]),
+            group_tables=[[list(map(int, g)) for g in t]
+                          for t in d["group_tables"]],
+            group_code=np.asarray(d["group_code"], dtype=np.int32),
+            stp_tables=[[(int(a), int(b)) for a, b in t]
+                        for t in d["stp_tables"]],
+            stp_code=np.asarray(d["stp_code"], dtype=np.int32),
+            axes_tables=[tuple(a) for a in d["axes_tables"]],
+            axes_code=np.asarray(d["axes_code"], dtype=np.int32))
+
+    @staticmethod
+    def _payload_from_v1(d: Dict[str, object]):
+        """Intern the per-row payloads of a schema-1 file."""
+        g_idx: Dict = {}
+        group_tables: List[List[List[int]]] = []
+        s_idx: Dict = {}
+        stp_tables: List[List[Tuple[int, int]]] = []
+        a_idx: Dict = {}
+        axes_tables: List[Tuple[str, ...]] = []
+        group_code, stp_code, axes_code = [], [], []
+        for rgs in d["replica_groups"]:
+            groups = [list(map(int, g)) for g in rgs]
+            key = tuple(tuple(g) for g in groups)
+            group_code.append(_intern(g_idx, key, group_tables, lambda: groups))
+        for p in d["source_target_pairs"]:
+            if not p:
+                stp_code.append(-1)
+                continue
+            pairs = [(int(a), int(b)) for a, b in p]
+            stp_code.append(_intern(s_idx, tuple(pairs), stp_tables,
+                                    lambda: pairs))
+        for a in d["axes"]:
+            t = tuple(a)
+            axes_code.append(_intern(a_idx, t, axes_tables, lambda: t))
+        return dict(
+            names=list(d["names"]),
+            group_tables=group_tables,
+            group_code=np.asarray(group_code, dtype=np.int32),
+            stp_tables=stp_tables,
+            stp_code=np.asarray(stp_code, dtype=np.int32),
+            axes_tables=axes_tables,
+            axes_code=np.asarray(axes_code, dtype=np.int32))
+
+    @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "TraceStore":
-        if d.get("version") != SCHEMA_VERSION:
-            raise ValueError(f"unknown TraceStore schema: {d.get('version')!r}")
+        version = d.get("version")
+        if version not in (1, SCHEMA_VERSION):
+            raise ValueError(f"unknown TraceStore schema: {version!r}")
         n = int(d["n"])
         num = {col: np.asarray(d["num"][col], dtype=dt).reshape(n)
                for col, dt in _NUM_COLS}
-        cat = {col: Categorical(
-                   np.asarray(d["cat"][col]["codes"], dtype=np.int32).reshape(n),
-                   list(d["cat"][col]["vocab"]))
-               for col in _CAT_COLS}
-        return cls(
-            n, num, cat,
-            names=list(d["names"]),
-            op_names=list(d["op_names"]),
-            axes=[tuple(a) for a in d["axes"]],
-            replica_groups=[[list(map(int, g)) for g in rgs]
-                            for rgs in d["replica_groups"]],
-            source_target_pairs=[
-                None if p is None else [(int(a), int(b)) for a, b in p]
-                for p in d["source_target_pairs"]])
+        cat = {}
+        for col in _CAT_COLS:
+            if col == "op_name" and col not in d["cat"]:
+                # v1 kept op_name as a per-row list, not a categorical
+                cat[col] = Categorical.from_values(list(d["op_names"]))
+                continue
+            cat[col] = Categorical(
+                np.asarray(d["cat"][col]["codes"], dtype=np.int32).reshape(n),
+                list(d["cat"][col]["vocab"]))
+        payload = cls._payload_from(d) if version == SCHEMA_VERSION \
+            else cls._payload_from_v1(d)
+        return cls(n, num, cat, **payload)
 
     def npz_arrays(self, prefix: str = "") -> Dict[str, np.ndarray]:
         """Flat array dict for `np.savez_compressed` (no object arrays).
 
         Numeric and code columns go in natively; the irregular payloads
-        (names, groups, pairs, vocabs) ride in one JSON side-car string —
+        (names, unique tables, vocabs) ride in one JSON side-car string —
         they are small relative to the columns and compress well.
         """
         arrs: Dict[str, np.ndarray] = {}
@@ -352,17 +542,17 @@ class TraceStore:
             arrs[f"{prefix}{col}"] = getattr(self, col)
         for col in _CAT_COLS:
             arrs[f"{prefix}cat_{col}"] = getattr(self, col).codes
+        arrs[f"{prefix}group_code"] = self.group_code
+        arrs[f"{prefix}stp_code"] = self.stp_code
+        arrs[f"{prefix}axes_code"] = self.axes_code
         side = {
             "version": SCHEMA_VERSION,
             "n": self.n,
             "vocab": {col: getattr(self, col).vocab for col in _CAT_COLS},
             "names": self.names,
-            "op_names": self.op_names,
-            "axes": [list(a) for a in self.axes],
-            "replica_groups": self.replica_groups,
-            "source_target_pairs": [
-                None if p is None else [list(pair) for pair in p]
-                for p in self.source_target_pairs],
+            "group_tables": self.group_tables,
+            "stp_tables": [[list(p) for p in t] for t in self.stp_tables],
+            "axes_tables": [list(a) for a in self.axes_tables],
         }
         arrs[f"{prefix}meta"] = np.array(json.dumps(side))
         return arrs
@@ -370,23 +560,35 @@ class TraceStore:
     @classmethod
     def from_npz_arrays(cls, arrs, prefix: str = "") -> "TraceStore":
         side = json.loads(str(arrs[f"{prefix}meta"]))
-        if side.get("version") != SCHEMA_VERSION:
-            raise ValueError(f"unknown TraceStore schema: {side.get('version')!r}")
+        version = side.get("version")
+        if version not in (1, SCHEMA_VERSION):
+            raise ValueError(f"unknown TraceStore schema: {version!r}")
         n = int(side["n"])
         num = {col: np.asarray(arrs[f"{prefix}{col}"], dtype=dt).reshape(n)
                for col, dt in _NUM_COLS}
-        cat = {col: Categorical(
-                   np.asarray(arrs[f"{prefix}cat_{col}"],
-                              dtype=np.int32).reshape(n),
-                   list(side["vocab"][col]))
-               for col in _CAT_COLS}
-        return cls(
-            n, num, cat,
-            names=list(side["names"]),
-            op_names=list(side["op_names"]),
-            axes=[tuple(a) for a in side["axes"]],
-            replica_groups=[[list(map(int, g)) for g in rgs]
-                            for rgs in side["replica_groups"]],
-            source_target_pairs=[
-                None if p is None else [(int(a), int(b)) for a, b in p]
-                for p in side["source_target_pairs"]])
+        cat = {}
+        for col in _CAT_COLS:
+            if col == "op_name" and col not in side["vocab"]:
+                cat[col] = Categorical.from_values(list(side["op_names"]))
+                continue
+            cat[col] = Categorical(
+                np.asarray(arrs[f"{prefix}cat_{col}"],
+                           dtype=np.int32).reshape(n),
+                list(side["vocab"][col]))
+        if version == SCHEMA_VERSION:
+            payload = dict(
+                names=list(side["names"]),
+                group_tables=[[list(map(int, g)) for g in t]
+                              for t in side["group_tables"]],
+                group_code=np.asarray(arrs[f"{prefix}group_code"],
+                                      dtype=np.int32).reshape(n),
+                stp_tables=[[(int(a), int(b)) for a, b in t]
+                            for t in side["stp_tables"]],
+                stp_code=np.asarray(arrs[f"{prefix}stp_code"],
+                                    dtype=np.int32).reshape(n),
+                axes_tables=[tuple(a) for a in side["axes_tables"]],
+                axes_code=np.asarray(arrs[f"{prefix}axes_code"],
+                                     dtype=np.int32).reshape(n))
+        else:
+            payload = cls._payload_from_v1(side)
+        return cls(n, num, cat, **payload)

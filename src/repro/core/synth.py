@@ -98,3 +98,137 @@ _PRIM_FOR = {
     "all-to-all": "all_to_all",
     "collective-permute": "ppermute",
 }
+
+
+# --------------------------------------------------------------------------
+# synthetic HLO text — ingest-pipeline workloads (parse -> annotate -> store)
+# --------------------------------------------------------------------------
+
+# replica-group attr repertoire for an 8-device mesh: iota forms (plain and
+# transposed) and explicit lists — the duplication mirrors real unrolled
+# HLO, where thousands of sites stamp the same handful of attrs.
+_RG_ATTRS_8 = (
+    "replica_groups=[2,4]<=[8]",
+    "replica_groups=[4,2]<=[8]",
+    "replica_groups=[1,8]<=[8]",
+    "replica_groups=[4,2]<=[2,4]T(1,0)",
+    "replica_groups=[2,4]<=[4,2]T(1,0)",
+    "replica_groups={{0,1,2,3},{4,5,6,7}}",
+    "replica_groups={{0,4},{1,5},{2,6},{3,7}}",
+)
+
+_STP_ATTR_8 = ("source_target_pairs={{0,1},{1,2},{2,3},{3,0},"
+               "{4,5},{5,6},{6,7},{7,4}}")
+
+_TYPES = ("bf16[256,512]", "bf16[1024,128]", "f32[128,128]", "f32[64,512]",
+          "bf16[32,64]", "f32[2048,16]")
+
+_SCOPES = ("layer/mlp", "layer/attn", "layer/moe/dispatch", "embed", "loss",
+           "opt_update", "pipeline")
+
+
+def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
+                  body_fraction: float = 0.25,
+                  backward_fraction: float = 0.4) -> str:
+    """Generate compiled-HLO-shaped text with `n_sites` collective op sites.
+
+    The module has the structure ingest cares about: an ENTRY computation,
+    a while loop (condition constant => trip-count multiplicity for the
+    `body_fraction` of sites placed in the body), async `-start`/`-done`
+    pairs, permutes with explicit source/target pairs, and a mix of iota
+    (plain + transposed) and explicit replica groups.  op_name metadata is
+    drawn from a small vocabulary, heavily duplicated — the property the
+    vocab-level attribution fast path exploits.
+    """
+    rng = np.random.default_rng(seed)
+    kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    kind_pick = rng.choice(len(kinds), size=n_sites,
+                           p=(0.35, 0.2, 0.15, 0.15, 0.15))
+    rg_pick = rng.choice(len(_RG_ATTRS_8), size=n_sites)
+    ty_pick = rng.choice(len(_TYPES), size=n_sites)
+    sc_pick = rng.choice(len(_SCOPES), size=n_sites)
+    bwd = rng.random(n_sites) < backward_fraction
+    is_async = rng.random(n_sites) < 0.2
+    in_body = rng.random(n_sites) < body_fraction
+
+    # op_name vocabulary: scope x fwd/bwd x primitive (small, duplicated)
+    op_names = {}
+    for si, scope in enumerate(_SCOPES):
+        for b in (False, True):
+            for kind in kinds:
+                wrap = "transpose(core_fn)/" if b else ""
+                op_names[(si, b, kind)] = (
+                    f"jit(train_step)/{wrap}{scope}/"
+                    f"{_PRIM_FOR.get(kind, 'psum')}")
+
+    def site_lines(i: int) -> list:
+        kind = kinds[kind_pick[i]]
+        ty = _TYPES[ty_pick[i]]
+        op_name = op_names[(int(sc_pick[i]), bool(bwd[i]), kind)]
+        md = f'metadata={{op_name="{op_name}"}}'
+        ch = f"channel_id={i + 1}"
+        nm = f"%{kind}.{i}"
+        if kind == "collective-permute":
+            return [f"  {nm} = {ty} collective-permute(%x), {ch}, "
+                    f"{_STP_ATTR_8}, {md}"]
+        rg = _RG_ATTRS_8[rg_pick[i]]
+        extra = ", use_global_device_ids=true, to_apply=%add" \
+            if kind in ("all-reduce", "reduce-scatter") else ", dimensions={0}"
+        if kind == "all-reduce" and is_async[i]:
+            # async pair: tuple-typed -start plus its -done marker
+            return [
+                f"  {nm} = ({ty}, {ty}) all-reduce-start(%x), {ch}, "
+                f"{rg}{extra}, {md}",
+                f"  %done.{i} = {ty} all-reduce-done({nm}), {md}",
+            ]
+        return [f"  {nm} = {ty} {kind}(%x), {ch}, {rg}{extra}, {md}"]
+
+    body_sites, entry_sites = [], []
+    for i in range(n_sites):
+        (body_sites if in_body[i] else entry_sites).append(i)
+
+    lines = [
+        "HloModule synth_ingest",
+        "",
+        "%add (a: f32[], b: f32[]) -> f32[] {",
+        "  %a = f32[] parameter(0)",
+        "  %b = f32[] parameter(1)",
+        "  ROOT %r = f32[] add(%a, %b)",
+        "}",
+        "",
+        "%cond (p: (s32[], bf16[256,512])) -> pred[] {",
+        "  %p = (s32[], bf16[256,512]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        f"  %n = s32[] constant({trip_count})",
+        "  ROOT %lt = pred[] compare(%i, %n), direction=LT",
+        "}",
+        "",
+        "%body (p: (s32[], bf16[256,512])) -> (s32[], bf16[256,512]) {",
+        "  %p = (s32[], bf16[256,512]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        "  %x = bf16[256,512] get-tuple-element(%p), index=1",
+        "  %one = s32[] constant(1)",
+        "  %i2 = s32[] add(%i, %one)",
+    ]
+    for i in body_sites:
+        lines.extend(site_lines(i))
+    lines += [
+        "  ROOT %t = (s32[], bf16[256,512]) tuple(%i2, %x)",
+        "}",
+        "",
+        "ENTRY %main (x: bf16[256,512]) -> bf16[256,512] {",
+        "  %x = bf16[256,512] parameter(0)",
+        "  %zero = s32[] constant(0)",
+        "  %init = (s32[], bf16[256,512]) tuple(%zero, %x)",
+        "  %w = (s32[], bf16[256,512]) while(%init), condition=%cond, "
+        "body=%body",
+    ]
+    for i in entry_sites:
+        lines.extend(site_lines(i))
+    lines += [
+        "  ROOT %out = bf16[256,512] get-tuple-element(%w), index=1",
+        "}",
+        "",
+    ]
+    return "\n".join(lines)

@@ -8,6 +8,7 @@ traffic rides: intra-pod ICI torus axes vs the inter-pod DCI.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -113,16 +114,33 @@ def hop_latency(mesh: MeshSpec, axes: Tuple[str, ...], hw: Hardware) -> float:
                for a in axes)
 
 
+@lru_cache(maxsize=4096)
+def _resolve_iota_cached(num_groups: int, group_size: int,
+                         reshape_dims: Tuple[int, ...],
+                         transpose_perm: Optional[Tuple[int, ...]]
+                         ) -> Tuple[Tuple[int, ...], ...]:
+    n = int(np.prod(reshape_dims))
+    ids = np.arange(n).reshape(reshape_dims)
+    if transpose_perm is not None:
+        ids = ids.transpose(transpose_perm)
+    ids = ids.reshape(num_groups, group_size)
+    return tuple(tuple(map(int, row)) for row in ids)
+
+
 def resolve_iota_groups(num_groups: int, group_size: int,
                         reshape_dims: Sequence[int],
                         transpose_perm: Optional[Sequence[int]]) -> List[List[int]]:
-    """Decode HLO iota replica groups `[G,S]<=[dims]T(perm)`."""
-    n = int(np.prod(reshape_dims))
-    ids = np.arange(n).reshape(tuple(reshape_dims))
-    if transpose_perm is not None:
-        ids = ids.transpose(tuple(transpose_perm))
-    ids = ids.reshape(num_groups, group_size)
-    return [list(map(int, row)) for row in ids]
+    """Decode HLO iota replica groups `[G,S]<=[dims]T(perm)`.
+
+    Memoized on the raw attribute tuple: unrolled loops stamp the same
+    `replica_groups=[G,S]<=[dims]` attr onto thousands of ops, so the
+    numpy decode runs once per unique attr; only the (cheap) list
+    materialization happens per call, keeping results mutation-safe.
+    """
+    rows = _resolve_iota_cached(
+        int(num_groups), int(group_size), tuple(int(d) for d in reshape_dims),
+        None if transpose_perm is None else tuple(int(p) for p in transpose_perm))
+    return [list(r) for r in rows]
 
 
 def comm_matrix(mesh: MeshSpec, events, resolution: str = "device") -> np.ndarray:

@@ -22,14 +22,33 @@ from repro.core.topology import Hardware, MeshSpec, V5E
 def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
                    hw: Hardware = V5E,
                    cost_analysis: Optional[Dict[str, float]] = None,
-                   memory_analysis: Any = None) -> Trace:
-    """Assemble a multi-layer trace from compiled HLO text."""
-    events, stats = hlo_parser.parse_hlo(hlo_text, mesh.num_devices)
-    for ev in events:
-        costmodel.annotate_event(ev, mesh, hw)
-    attribution.attribute_all(events)
-    tr = Trace(label=label, mesh_shape=mesh.shape, mesh_axes=mesh.axes,
-               num_devices=mesh.num_devices, events=events, op_stats=stats)
+                   memory_analysis: Any = None,
+                   engine: str = "columnar") -> Trace:
+    """Assemble a multi-layer trace from compiled HLO text.
+
+    `engine` selects the ingest pipeline:
+      * `"columnar"` (default) — single-pass parse straight into
+        `TraceStore` columns, batched cost model + vocab-level attribution
+        (`annotate_store` / `attribute_store`); event rows stay lazy.
+      * `"rows"` — the per-event reference path (dataclass per site,
+        `annotate_event` / `attribute_event` per event).  Kept as the
+        equivalence baseline; see tests/test_ingest.py.
+    """
+    if engine == "columnar":
+        store, stats = hlo_parser.parse_hlo_store(hlo_text, mesh.num_devices)
+        costmodel.annotate_store(store, mesh, hw)
+        attribution.attribute_store(store)
+        tr = Trace.from_store(label, mesh.shape, mesh.axes, mesh.num_devices,
+                              store, op_stats=stats)
+    elif engine == "rows":
+        events, stats = hlo_parser.parse_hlo(hlo_text, mesh.num_devices)
+        for ev in events:
+            costmodel.annotate_event(ev, mesh, hw)
+        attribution.attribute_all(events)
+        tr = Trace(label=label, mesh_shape=mesh.shape, mesh_axes=mesh.axes,
+                   num_devices=mesh.num_devices, events=events, op_stats=stats)
+    else:
+        raise ValueError(f"unknown ingest engine: {engine!r}")
     # loop-aware parsed totals are authoritative (cost_analysis counts while
     # bodies once); fall back to cost_analysis when parsing finds nothing.
     tr.hlo_flops = float(stats.flops)
