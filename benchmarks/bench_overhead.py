@@ -5,20 +5,26 @@ is compile-time: the overhead is pure offline analysis (HLO parse + assembly)
 on top of an unavoidable lower+compile, with zero runtime cost.  We measure
 lower/compile/parse wall time and trace size for a dense and a MoE step.
 
-Also measures the two analysis hot paths at the paper's experiment scale:
+Also measures the analysis hot paths at the paper's experiment scale:
 
   * aggregation — a 100k-event trace rolled up by (kind x link) + semantic,
     columnar (`TraceStore` bincount) vs the per-event Python reference
-    (>= 5x gate), and
+    (>= 5x gate),
   * end-to-end ingest — parse -> attribute -> annotate -> store of a
     100k-site synthetic HLO module, single-pass columnar engine vs the
     per-event reference pipeline (>= 5x gate, byte-identical aggregates).
     The result is persisted to BENCH_ingest.json at the repo root so the
-    perf trajectory is tracked across PRs.
+    perf trajectory is tracked across PRs, and
+  * render + diff — JSON/HTML reports and a 3-way site-level session diff
+    of a 100k-site trace, columnar emitters (`report` engine="columnar",
+    `diff` union-vocab alignment) vs the per-event reference walk
+    (engine="rows"), byte-identical output required (>= 5x gate).
+    Persisted to BENCH_render.json at the repo root.
 
-CI smoke entry point (no jax worker, smaller trace):
+CI smoke entry points (no jax worker, smaller traces):
 
     python benchmarks/bench_overhead.py --ingest-only [--sites N]
+    python benchmarks/bench_overhead.py --render-only [--sites N]
 """
 from __future__ import annotations
 
@@ -196,8 +202,92 @@ def _ingest_case(n_sites: int = 100_000, json_path: str = None):
     return rows, payload
 
 
+def _render_case(n_sites: int = 100_000, json_path: str = None):
+    """Renderer + diff: columnar emitters vs the per-event reference.
+
+    Workload: JSON report, HTML report, a 3-trace site-level `diff_n`,
+    and a pairwise `diff_traces` — once with engine="rows" (per-event
+    walks, dict-aligned diff), once columnar.  Gate: >= 5x at 100k sites
+    with byte-identical renderer output and identical diff rows; the
+    streaming `write_json` must reproduce `to_json` exactly.
+    """
+    import io
+
+    from repro.core import diff as diff_mod
+    from repro.core import report as report_mod
+    from repro.core.synth import synthetic_trace
+    from repro.core.topology import MeshSpec
+
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    traces = [
+        synthetic_trace("base", mesh, n_sites=n_sites, seed=0),
+        synthetic_trace("dp-heavy", mesh, n_sites=n_sites, seed=1,
+                        axis_weights=(3.0, 1.0)),
+        synthetic_trace("tp-heavy", mesh, n_sites=n_sites, seed=2,
+                        axis_weights=(1.0, 3.0)),
+    ]
+    tr = traces[0]
+    for t in traces:        # materialize both views outside the timing
+        _ = t.events, t.store
+
+    def render(engine):
+        return (report_mod.to_json(tr, engine=engine),
+                report_mod.to_html(tr, mesh, engine=engine),
+                diff_mod.diff_n(traces, by="site", engine=engine),
+                diff_mod.diff_traces(traces[0], traces[1], by="kind_link",
+                                     engine=engine))
+
+    t0 = time.perf_counter()
+    ref = render("rows")
+    t_ref = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fast = render("columnar")
+    t_fast = time.perf_counter() - t0
+
+    buf = io.StringIO()
+    report_mod.write_json(tr, buf, chunk_sites=max(n_sites // 4, 1))
+    identical = (ref[0] == fast[0] and ref[1] == fast[1]
+                 and ref[2] == fast[2] and ref[3] == fast[3]
+                 and buf.getvalue() == fast[0])
+    speedup = t_ref / max(t_fast, 1e-9)
+    payload = {
+        "bench": "render_diff",
+        "sites": n_sites,
+        "n_traces": len(traces),
+        "json_kb": len(fast[0]) // 1024,
+        "ref_s": round(t_ref, 4),
+        "columnar_s": round(t_fast, 4),
+        "speedup": round(speedup, 2),
+        "target": 5.0,
+        "byte_identical": identical,
+    }
+    if json_path is None:
+        # repo-root artifact = the cross-PR trajectory; smoke sizes land in
+        # results/ (not comparable across sizes, gated by ratio instead)
+        if n_sites >= 100_000:
+            json_path = os.path.join(REPO, "BENCH_render.json")
+        else:
+            os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
+            json_path = os.path.join(REPO, "results",
+                                     "BENCH_render_smoke.json")
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    rows = [
+        (f"overhead/render{n_sites//1000}k/per_event", t_ref * 1e6,
+         "baseline-cost"),
+        (f"overhead/render{n_sites//1000}k/columnar", t_fast * 1e6,
+         f"speedup={speedup:.1f}x|target>=5x|sites={n_sites}|"
+         f"json_kb={payload['json_kb']}|byte_identical={identical}"),
+    ]
+    return rows, payload
+
+
 def run():
     rows = _agg_100k_case()
+    render_rows, _rpayload = _render_case()     # 100k: writes BENCH_render.json
+    rows += render_rows
     ingest_rows, _payload = _ingest_case()      # 100k: writes BENCH_ingest.json
     rows += ingest_rows
     out = run_worker(WORKER, devices=8)
@@ -208,8 +298,8 @@ def run():
 
 
 if __name__ == "__main__":
-    # smoke entry point for CI: the ingest case only (pure numpy, no jax
-    # compile workers), with a configurable trace size.
+    # smoke entry points for CI: the ingest and/or render cases only (pure
+    # numpy, no jax compile workers), with a configurable trace size.
     import argparse
     import sys
 
@@ -217,23 +307,38 @@ if __name__ == "__main__":
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--ingest-only", action="store_true")
+    ap.add_argument("--render-only", action="store_true")
     ap.add_argument("--sites", type=int,
                     default=int(os.environ.get("INGEST_SITES", 100_000)))
     args = ap.parse_args()
-    if not args.ingest_only:
-        ap.error("only --ingest-only is supported as a direct entry point")
-    rows, payload = _ingest_case(n_sites=args.sites)
-    dest = "BENCH_ingest.json" if args.sites >= 100_000 \
-        else "results/BENCH_ingest_smoke.json"
-    for name, us, derived in rows:
-        print(f"{name},{us:.2f},{derived}")
-    if not payload["equivalent"]:
-        print("FAIL: columnar ingest aggregates diverge from the "
-              "per-event reference", file=sys.stderr)
-        sys.exit(1)
-    if payload["speedup"] < payload["target"] and args.sites >= 100_000:
-        print(f"FAIL: ingest speedup {payload['speedup']}x below the "
-              f"{payload['target']}x gate", file=sys.stderr)
-        sys.exit(1)
-    print(f"ingest ok: {payload['speedup']}x at {payload['sites']} sites "
-          f"-> {dest}")
+    if not (args.ingest_only or args.render_only):
+        ap.error("pass --ingest-only and/or --render-only as a direct "
+                 "entry point")
+    cases = [
+        # (enabled, case fn, artifact stem, equivalence key, label)
+        (args.ingest_only, _ingest_case, "BENCH_ingest", "equivalent",
+         "ingest"),
+        (args.render_only, _render_case, "BENCH_render", "byte_identical",
+         "render"),
+    ]
+    failed = False
+    for enabled, case_fn, stem, equiv_key, label in cases:
+        if not enabled:
+            continue
+        rows, payload = case_fn(n_sites=args.sites)
+        dest = f"{stem}.json" if args.sites >= 100_000 \
+            else f"results/{stem}_smoke.json"
+        for name, us, derived in rows:
+            print(f"{name},{us:.2f},{derived}")
+        if not payload[equiv_key]:
+            print(f"FAIL: columnar {label} output diverges from the "
+                  "per-event reference", file=sys.stderr)
+            failed = True
+        elif payload["speedup"] < payload["target"] and args.sites >= 100_000:
+            print(f"FAIL: {label} speedup {payload['speedup']}x below the "
+                  f"{payload['target']}x gate", file=sys.stderr)
+            failed = True
+        else:
+            print(f"{label} ok: {payload['speedup']}x at {payload['sites']} "
+                  f"sites -> {dest}")
+    sys.exit(1 if failed else 0)

@@ -1,0 +1,82 @@
+#!/usr/bin/env python
+"""CI bench-trajectory gate.
+
+Compares the speedup measured by this run's smoke benches against the
+speedup recorded in the committed repo-root BENCH artifacts, and fails
+when the run regresses below `--min-ratio` (default 0.8x) of the
+recorded value.  Smoke and committed runs use different trace sizes, so
+absolute times are not comparable — the *speedup ratio* is the
+trajectory signal the ROADMAP asks CI to keep monotone.
+
+Usage (from the repo root):
+
+    python scripts/bench_gate.py \\
+        results/BENCH_ingest_smoke.json:BENCH_ingest.json \\
+        results/BENCH_render_smoke.json:BENCH_render.json
+
+Each positional argument is `run.json:committed.json`.  Both numbers are
+printed per bench, and appended to $GITHUB_STEP_SUMMARY as a table when
+running under GitHub Actions.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("pairs", nargs="+", metavar="RUN:COMMITTED",
+                    help="smoke-result path : committed-artifact path")
+    ap.add_argument("--min-ratio", type=float, default=0.8,
+                    help="fail when run speedup / committed speedup drops "
+                         "below this (default 0.8)")
+    args = ap.parse_args(argv)
+
+    md = ["| bench | run speedup | committed speedup | ratio | gate |",
+          "|---|---:|---:|---:|---|"]
+    failed = False
+    for pair in args.pairs:
+        try:
+            run_path, ref_path = pair.split(":", 1)
+        except ValueError:
+            print(f"error: bad pair {pair!r} (want RUN:COMMITTED)",
+                  file=sys.stderr)
+            return 2
+        try:
+            with open(run_path) as f:
+                run = json.load(f)
+            with open(ref_path) as f:
+                ref = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"error: cannot read bench pair {pair}: {e}",
+                  file=sys.stderr)
+            return 2
+        name = run.get("bench") or os.path.basename(ref_path)
+        run_sp = float(run["speedup"])
+        ref_sp = float(ref["speedup"])
+        ratio = run_sp / ref_sp if ref_sp > 0 else float("inf")
+        ok = ratio >= args.min_ratio
+        failed |= not ok
+        verdict = "OK" if ok else "FAIL"
+        print(f"{name}: run {run_sp:.2f}x vs committed {ref_sp:.2f}x "
+              f"-> ratio {ratio:.2f} [{verdict} >= {args.min_ratio}]")
+        md.append(f"| {name} | {run_sp:.2f}x | {ref_sp:.2f}x | {ratio:.2f} "
+                  f"| {verdict} |")
+
+    summary_path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary_path:
+        with open(summary_path, "a") as f:
+            f.write("### bench trajectory gate\n\n")
+            f.write("\n".join(md) + "\n")
+    if failed:
+        print(f"bench trajectory gate FAILED (min ratio {args.min_ratio})",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

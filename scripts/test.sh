@@ -1,6 +1,34 @@
 #!/usr/bin/env sh
 # Tier-1 test gate: run from the repo root.  Extra args pass through to
 # pytest (e.g. `scripts/test.sh tests/test_session.py -k roundtrip`).
-set -eu
+#
+#   TIER=smoke scripts/test.sh    # reproduce the CI job in one command:
+#                                 # analysis-layer tests, the ingest/render
+#                                 # smoke benches, and the bench-trajectory
+#                                 # gate (no jax compilation)
+set -u
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+if [ "${TIER:-full}" = "smoke" ]; then
+    python -m pytest -x -q \
+        tests/test_ingest.py tests/test_render.py tests/test_report.py \
+        tests/test_session.py tests/test_detect.py tests/test_tracer.py \
+        "$@"
+    rc=$?
+    if [ "$rc" -ne 0 ]; then
+        exit "$rc"
+    fi
+    python benchmarks/bench_overhead.py --ingest-only --sites 20000 || exit $?
+    python benchmarks/bench_overhead.py --render-only --sites 20000 || exit $?
+    python scripts/bench_gate.py \
+        results/BENCH_ingest_smoke.json:BENCH_ingest.json \
+        results/BENCH_render_smoke.json:BENCH_render.json
+    exit $?
+fi
+
+# propagate pytest's exit code explicitly (no `exec`: wrappers that spawn
+# a subshell would otherwise swallow the status `exec` hands off)
+python -m pytest -x -q "$@"
+exit $?

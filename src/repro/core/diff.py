@@ -1,21 +1,72 @@
 """Trace diffing — the before/after workflow of the paper's case studies.
 
 ucTrace's users compare runs (eager vs rndv configs, NUMA-aware vs not,
-OMPI vs MPICH).  `diff_traces` aligns two traces by (kind, link class,
-semantic) and reports byte/count/time deltas, new/vanished traffic classes,
-and a verdict line per class — so "what did my change do to communication?"
-is one function call on two compiled artifacts.
+OMPI vs MPICH).  `diff_traces` aligns two traces by traffic class and
+reports byte/count/time deltas, new/vanished classes, and a verdict line
+per class — so "what did my change do to communication?" is one function
+call on two compiled artifacts.
 
 `diff_n` generalizes the alignment to N traces (the paper's "Allreduce
 across MPI libraries / UCX settings" shape): one row per traffic class,
 one column per trace, rendered by `report.session_table`.
+
+Alignment is *code-aligned* by default: every trace rolls up once over
+its interned categorical codes, the per-trace label tables are merged
+into one union vocabulary (`store.union_rollup`), and bytes/count/time
+scatter into a `(n_keys, n_traces)` matrix — no string-keyed dicts on
+the N-trace hot path, so session diffs stay cheap at 100k+ sites.  The
+dict-aligned per-event walk is retained as `engine="rows"`, the
+reference the columnar rows are pinned byte-identical to by
+tests/test_render.py.
+
+Besides the class-level keys, `by="site"` aligns on the interned
+op_name x kind x axes triple — one row per compiled callsite class —
+so a regression shows up against the op_name that produced it instead
+of washing out in a kind x link rollup.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Dict, List, Sequence, Tuple
 
-from repro.core.events import Trace
+import numpy as np
+
+from repro.core.events import Trace, site_key
+from repro.core.store import union_rollup
+
+# per-event key functions, one per alignment mode — the dict-aligned
+# reference (`engine="rows"`) and the columnar `TraceStore._codes_for`
+# must key identically, label for label.
+KEY_FNS = {
+    "kind_link": lambda e: f"{e.kind}|{e.link_class}",
+    "semantic": lambda e: e.semantic or "other",
+    "site": site_key,
+    "sem_kind_link": lambda e: f"{e.semantic}|{e.kind}|{e.link_class}",
+}
+
+
+def _norm_by(by: str) -> str:
+    # historic behavior: any unknown key meant the 3-way class rollup
+    return by if by in KEY_FNS else "sem_kind_link"
+
+
+def _agg(trace: Trace, by: str) -> Dict[str, Dict[str, float]]:
+    """Per-event reference aggregation (one dict walk over the rows)."""
+    return trace.by(KEY_FNS[_norm_by(by)])
+
+
+def _aligned(traces: Sequence[Trace], by: str
+             ) -> Tuple[List[str], np.ndarray]:
+    """Union keys (alphabetical) + (4, n_keys, n_traces) metric tensor.
+
+    Key order matches the reference's `sorted(set(...))`, so a stable
+    sort by any metric afterwards ties off identically on both paths.
+    """
+    union, mats = union_rollup([t.store for t in traces], _norm_by(by))
+    if not union:
+        return [], mats
+    order = np.argsort(np.asarray(union))
+    return [union[int(i)] for i in order], mats[:, order, :]
 
 
 @dataclass
@@ -47,25 +98,30 @@ class DiffRow:
         return "~same"
 
 
-def _agg(trace: Trace, by: str) -> Dict[str, Dict[str, float]]:
-    if by == "kind_link":
-        return trace.by_kind_and_link()
-    if by == "semantic":
-        return trace.by_semantic()
-    return trace.store.by_sem_kind_link()
-
-
-def diff_traces(a: Trace, b: Trace, by: str = "kind_link") -> List[DiffRow]:
-    agg_a = _agg(a, by)
-    agg_b = _agg(b, by)
-    rows = []
-    for key in sorted(set(agg_a) | set(agg_b)):
-        ra = agg_a.get(key, {"bytes": 0, "count": 0, "time_s": 0})
-        rb = agg_b.get(key, {"bytes": 0, "count": 0, "time_s": 0})
-        rows.append(DiffRow(key, ra["bytes"], rb["bytes"], ra["count"],
-                            rb["count"], ra["time_s"], rb["time_s"]))
-    rows.sort(key=lambda r: -(abs(r.bytes_b - r.bytes_a)))
-    return rows
+def diff_traces(a: Trace, b: Trace, by: str = "kind_link",
+                engine: str = "columnar") -> List[DiffRow]:
+    """Align two traces by traffic class, sorted by |byte delta|."""
+    if engine == "rows":
+        agg_a = _agg(a, by)
+        agg_b = _agg(b, by)
+        zero = {"bytes": 0.0, "count": 0.0, "time_s": 0.0}
+        rows = []
+        for key in sorted(set(agg_a) | set(agg_b)):
+            ra = agg_a.get(key, zero)
+            rb = agg_b.get(key, zero)
+            rows.append(DiffRow(key, ra["bytes"], rb["bytes"], ra["count"],
+                                rb["count"], ra["time_s"], rb["time_s"]))
+        rows.sort(key=lambda r: -(abs(r.bytes_b - r.bytes_a)))
+        return rows
+    keys, mats = _aligned((a, b), by)
+    if not keys:
+        return []
+    bm, cm, tm = mats[0], mats[2], mats[3]
+    order = np.argsort(-np.abs(bm[:, 1] - bm[:, 0]), kind="stable")
+    return [DiffRow(keys[i], float(bm[i, 0]), float(bm[i, 1]),
+                    float(cm[i, 0]), float(cm[i, 1]),
+                    float(tm[i, 0]), float(tm[i, 1]))
+            for i in (int(j) for j in order)]
 
 
 def render_diff(a: Trace, b: Trace, by: str = "kind_link") -> str:
@@ -119,15 +175,28 @@ class NWayRow:
         return f"varies {r:.2f}x" if r > 1 + threshold else "~same"
 
 
-def diff_n(traces: Sequence[Trace], by: str = "kind_link") -> List[NWayRow]:
+def diff_n(traces: Sequence[Trace], by: str = "kind_link",
+           engine: str = "columnar") -> List[NWayRow]:
     """Align N traces by traffic class; rows sorted by peak bytes."""
-    aggs = [_agg(t, by) for t in traces]
-    keys = sorted(set().union(*aggs)) if aggs else []
-    zero = {"bytes": 0.0, "count": 0.0, "time_s": 0.0}
-    rows = [NWayRow(key=k,
-                    bytes_=[a.get(k, zero)["bytes"] for a in aggs],
-                    counts=[a.get(k, zero)["count"] for a in aggs],
-                    times=[a.get(k, zero)["time_s"] for a in aggs])
-            for k in keys]
-    rows.sort(key=lambda r: -r.max_bytes)
-    return rows
+    traces = list(traces)
+    if engine == "rows":
+        aggs = [_agg(t, by) for t in traces]
+        keys = sorted(set().union(*aggs)) if aggs else []
+        zero = {"bytes": 0.0, "count": 0.0, "time_s": 0.0}
+        rows = [NWayRow(key=k,
+                        bytes_=[a.get(k, zero)["bytes"] for a in aggs],
+                        counts=[a.get(k, zero)["count"] for a in aggs],
+                        times=[a.get(k, zero)["time_s"] for a in aggs])
+                for k in keys]
+        rows.sort(key=lambda r: -r.max_bytes)
+        return rows
+    if not traces:
+        return []
+    keys, mats = _aligned(traces, by)
+    if not keys:
+        return []
+    bm, cm, tm = mats[0], mats[2], mats[3]
+    order = np.argsort(-bm.max(axis=1), kind="stable")
+    return [NWayRow(key=keys[i], bytes_=bm[i].tolist(),
+                    counts=cm[i].tolist(), times=tm[i].tolist())
+            for i in (int(j) for j in order)]

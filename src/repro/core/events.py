@@ -49,6 +49,17 @@ class CollectiveEvent:
         return self.wire_bytes_per_device * self.group_size * self.num_groups
 
 
+def site_key(e: "CollectiveEvent") -> str:
+    """Site-level alignment key: op_name x kind x mesh axes.
+
+    The per-event analogue of the interned code triple the columnar diff
+    aligns on (`TraceStore._codes_for("site")`) — one key per compiled
+    callsite class, so cross-run regressions localize to the op_name that
+    produced them instead of washing out in kind x link rollups.
+    """
+    return f"{e.op_name}|{e.kind}|{','.join(e.axes)}"
+
+
 @dataclass
 class HloOpStats:
     """Non-collective per-program stats used by detectors/roofline."""
@@ -202,3 +213,7 @@ class Trace:
 
     def by_semantic(self):
         return self.store.by_semantic()
+
+    def by_site(self):
+        """Per-callsite rollup keyed on `site_key` (op_name x kind x axes)."""
+        return self.store.by_site()

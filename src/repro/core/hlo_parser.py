@@ -453,6 +453,23 @@ _FAST_COLLECTIVE_RE = re.compile(
     r"(all-reduce|all-gather|reduce-scatter|ragged-all-to-all|all-to-all|"
     r"collective-permute|collective-broadcast)(-start|-done)?\((.*)$")
 
+# the non-collective sibling: ONE combined regex both matches the op line
+# and classifies its stats treatment via which alternative captured —
+# transpose-class, fusion, convert, reshape/bitcast, dot, a traffic-exempt
+# kind (_NO_TRAFFIC/_FUSED_ON_TPU, folded into the alternation so the hot
+# loop does no Python set dispatch), or a generic traffic-charged op.
+# Alternatives are all anchored on the trailing `(`, so each line yields
+# exactly the token `_OPLINE_RE` would have captured.
+_STATS_SKIP_KINDS = sorted(
+    (_NO_TRAFFIC | _FUSED_ON_TPU)
+    - {"transpose", "copy", "convert", "reshape", "bitcast"},
+    key=len, reverse=True)
+_FAST_STATS_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?\)?)\s*(?<![\w.\-])"
+    r"(?:(transpose[a-z0-9\-]*|copy)|(fusion)|(convert)|(reshape|bitcast)|"
+    r"(dot)|(?:" + "|".join(_STATS_SKIP_KINDS) + r")|([a-z][a-z0-9\-]*))"
+    r"\((.*)$")
+
 
 def parse_hlo_store(text: str, num_devices: int):
     """Single-pass fast path: collective op lines -> `TraceStore` columns.
@@ -539,7 +556,19 @@ def parse_hlo_store(text: str, num_devices: int):
 
     coll_search = _COLL_HINT_RE.search
     fast_match = _FAST_COLLECTIVE_RE.match
-    opline_match = _OPLINE_RE.match
+    stats_match = _FAST_STATS_RE.match
+    tb_cache: Dict[str, int] = {}        # stats type string -> result bytes
+    scope_cache: Dict[str, str] = {}     # stats op_name -> named_scope
+
+    def stats_scope(ln: str) -> str:
+        md_ = _METADATA_RE.search(ln)
+        if md_ is None:
+            return ""
+        op = md_.group(1)
+        sc_ = scope_cache.get(op)
+        if sc_ is None:
+            sc_ = scope_cache[op] = split_op_name(op)[0] if op else ""
+        return sc_
 
     for name, comp in comps.items():
         if name == "__entry__":
@@ -554,11 +583,54 @@ def parse_hlo_store(text: str, num_devices: int):
                 line = _COMMENT_RE.sub("", line)
             cm = fast_match(line) if coll_search(line) else None
             if cm is None:
-                lm = opline_match(line)
-                if lm is None:
+                sm = stats_match(line)
+                if sm is None:
                     continue
-                _scan_stats(line, lm.groups(), m, stats, shapes, kinds,
-                            in_fusion_body)
+                (_nm, type_str, k_tc, k_fu, k_cv, k_rs, k_dot, k_gen,
+                 rest) = sm.groups()
+                if k_dot is not None:
+                    fl = _dot_flops(line, type_str, shapes) * m
+                    stats.flops += fl
+                    sc = stats_scope(line)
+                    stats.flops_by_scope[sc] = \
+                        stats.flops_by_scope.get(sc, 0.0) + fl
+                # traffic: generic / fusion / dot ops always charge; the
+                # transpose class only when the exact kind is not exempt
+                # (plain transpose and copy are fused on TPU, a
+                # transpose-variant op is not)
+                if (not in_fusion_body
+                        and (k_gen is not None or k_fu is not None
+                             or k_dot is not None
+                             or (k_tc is not None
+                                 and k_tc not in _FUSED_ON_TPU))):
+                    rb = tb_cache.get(type_str)
+                    if rb is None:
+                        rb = tb_cache[type_str] = parse_type_bytes(type_str)[0]
+                    pb = 0
+                    for op_ref in _OPERANDS_RE.findall(rest.split(")")[0]):
+                        if kinds.get(op_ref) == "parameter":
+                            ts = shapes.get(op_ref, "")
+                            b = pbytes_cache.get(ts)
+                            if b is None:
+                                b = pbytes_cache[ts] = parse_type_bytes(ts)[0]
+                            pb += b
+                    tb = (2 * rb + pb) * m
+                    stats.bytes_accessed += tb
+                    sc = stats_scope(line)
+                    stats.bytes_by_scope[sc] = \
+                        stats.bytes_by_scope.get(sc, 0.0) + tb
+                if k_tc is not None:
+                    stats.n_transpose += 1
+                    rb = tb_cache.get(type_str)
+                    if rb is None:
+                        rb = tb_cache[type_str] = parse_type_bytes(type_str)[0]
+                    stats.transpose_bytes += rb * m
+                elif k_fu is not None:
+                    stats.n_fusion += 1
+                elif k_cv is not None:
+                    stats.n_convert += 1
+                elif k_rs is not None:
+                    stats.n_reshape += 1
                 continue
 
             op_result, type_str, base, suffix, rest = cm.groups()

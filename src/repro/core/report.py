@@ -6,15 +6,31 @@ Views (paper analogues):
   * device view            — Fig 3d: per-link-class traffic graph
   * timeline               — Fig 3a: modeled serialized collective schedule
   * semantic breakdown     — the MPI-function layer rollup
+
+The renderers are columnar by default: everything events-proportional
+(the JSON event array, the table rollups, the timeline sort) emits
+straight from `TraceStore` columns — vocab entries are formatted once
+and broadcast through codes, rows never materialize as
+`CollectiveEvent` objects, and `write_json`/`write_html` stream the
+output in bounded chunks so a 1M-site trace renders without holding
+the rendered text (or the row objects) in memory.  The per-event walk
+is retained behind `engine="rows"` as the reference; the columnar
+output is pinned **byte-identical** to it by tests/test_render.py and
+`benchmarks/bench_overhead.py --render-only` (BENCH_render.json),
+mirroring the PR 3 ingest pattern.  The mesh-sized sections (summary
+line, comm-matrix heatmaps) are shared between engines — they do not
+scale with events.
 """
 from __future__ import annotations
 
 import html as html_mod
 import json
-from typing import Dict, List, Optional
+from json.encoder import encode_basestring_ascii as _esc_json
+from typing import IO, Iterator, List, Optional
 
 import numpy as np
 
+from repro.core.diff import KEY_FNS, _norm_by, diff_n
 from repro.core.events import Trace
 from repro.core.topology import MeshSpec, comm_matrix, reduce_matrix
 
@@ -23,26 +39,59 @@ from repro.core.topology import MeshSpec, comm_matrix, reduce_matrix
 # ASCII
 # --------------------------------------------------------------------------
 
-def top_contenders_table(trace: Trace, by: str = "kind_link") -> str:
-    """Bytes% (count%) per (collective kind x link class) — Table II analogue."""
-    agg = trace.by_kind_and_link() if by == "kind_link" else trace.by_semantic()
-    tot_b = sum(a["bytes"] for a in agg.values()) or 1.0
-    tot_c = sum(a["count"] for a in agg.values()) or 1.0
-    rows = sorted(agg.items(), key=lambda kv: -kv[1]["bytes"])
-    lines = [f"{'key':44s} {'bytes%':>8s} {'count%':>8s} {'GB':>10s} "
-             f"{'count':>8s} {'est_ms':>8s}"]
-    for k, a in rows:
+_CONTENDERS_HEAD = (f"{'key':44s} {'bytes%':>8s} {'count%':>8s} {'GB':>10s} "
+                    f"{'count':>8s} {'est_ms':>8s}")
+
+
+def _contenders_text(rows, tot_b: float, tot_c: float, tot_t: float) -> str:
+    """Shared formatter: rows are (key, bytes, count, time_s) tuples."""
+    tot_b = tot_b or 1.0
+    tot_c = tot_c or 1.0
+    lines = [_CONTENDERS_HEAD]
+    for k, b, c, t in rows:
         lines.append(
-            f"{k:44s} {100*a['bytes']/tot_b:7.1f}% {100*a['count']/tot_c:7.1f}% "
-            f"{a['bytes']/1e9:10.3f} {int(a['count']):8d} {a['time_s']*1e3:8.3f}")
+            f"{k:44s} {100*b/tot_b:7.1f}% {100*c/tot_c:7.1f}% "
+            f"{b/1e9:10.3f} {int(c):8d} {t*1e3:8.3f}")
     lines.append(f"{'total':44s} {'100.0%':>8s} {'100.0%':>8s} "
-                 f"{tot_b/1e9:10.3f} {int(tot_c):8d} "
-                 f"{trace.total_est_time_s()*1e3:8.3f}")
+                 f"{tot_b/1e9:10.3f} {int(tot_c):8d} {tot_t*1e3:8.3f}")
     return "\n".join(lines)
 
 
-def semantic_table(trace: Trace) -> str:
-    return top_contenders_table(trace, by="semantic")
+def top_contenders_table(trace: Trace, by: str = "kind_link",
+                         engine: str = "columnar") -> str:
+    """Bytes% (count%) per traffic class — Table II analogue.
+
+    Rows sort by descending bytes, ties alphabetically (a total order, so
+    both engines render identically).  The total-ms cell accumulates in
+    row order on both paths for the same reason (`serial_est_time_s`).
+    """
+    by = _norm_by(by)
+    if engine == "rows":
+        agg = trace.by(KEY_FNS[by])
+        items = sorted(agg.items(), key=lambda kv: (-kv[1]["bytes"], kv[0]))
+        rows = [(k, a["bytes"], a["count"], a["time_s"]) for k, a in items]
+        tot_t = 0.0
+        for e in trace.events:
+            tot_t += e.est_time_s * e.multiplicity
+        return _contenders_text(rows,
+                                sum(a["bytes"] for a in agg.values()),
+                                sum(a["count"] for a in agg.values()), tot_t)
+    s = trace.store
+    labels, mat = s.rollup(by)
+    if labels:
+        alph = np.argsort(np.asarray(labels))
+        b, c, t = mat[0][alph], mat[2][alph], mat[3][alph]
+        order = np.argsort(-b, kind="stable")
+        rows = [(labels[int(alph[i])], float(b[i]), float(c[i]), float(t[i]))
+                for i in (int(j) for j in order)]
+    else:
+        rows = []
+    return _contenders_text(rows, float(mat[0].sum()), float(mat[2].sum()),
+                            s.serial_est_time_s())
+
+
+def semantic_table(trace: Trace, engine: str = "columnar") -> str:
+    return top_contenders_table(trace, by="semantic", engine=engine)
 
 
 def ascii_matrix(mat: np.ndarray, labels: Optional[List[str]] = None,
@@ -59,20 +108,42 @@ def ascii_matrix(mat: np.ndarray, labels: Optional[List[str]] = None,
     return "\n".join(out)
 
 
-def timeline(trace: Trace, top: int = 30) -> str:
+_TIMELINE_HEAD = (f"{'t_start_us':>10s} {'dur_us':>9s} {'x':>5s} {'kind':18s} "
+                  f"{'link':16s} {'semantic':14s} scope")
+
+
+def timeline(trace: Trace, top: int = 30, engine: str = "columnar") -> str:
     """Modeled serialized schedule of the heaviest collectives (Fig 3a)."""
-    s = trace.store
-    order = np.argsort(-(s.est_time_s * s.weights), kind="stable")[:top]
+    lines = [_TIMELINE_HEAD]
     t = 0.0
-    lines = [f"{'t_start_us':>10s} {'dur_us':>9s} {'x':>5s} {'kind':18s} "
-             f"{'link':16s} {'semantic':14s} scope"]
-    for i in order:
-        dur = s.est_time_s[i] * 1e6
-        lines.append(f"{t*1e6:10.1f} {dur:9.2f} {int(s.multiplicity[i]):5d} "
-                     f"{s.kind.value(i):18s} {s.link_class.value(i):16s} "
-                     f"{s.semantic.value(i):14s} "
-                     f"{s.scope.value(i)[:48]}")
-        t += s.est_time_s[i] * s.multiplicity[i]
+    if engine == "rows":
+        evs = trace.events
+        order = sorted(range(len(evs)),
+                       key=lambda i: -(evs[i].est_time_s
+                                       * evs[i].multiplicity))[:top]
+        for i in order:
+            e = evs[i]
+            lines.append(f"{t*1e6:10.1f} {e.est_time_s*1e6:9.2f} "
+                         f"{e.multiplicity:5d} {e.kind:18s} "
+                         f"{e.link_class:16s} {e.semantic:14s} "
+                         f"{e.scope[:48]}")
+            t += e.est_time_s * e.multiplicity
+        return "\n".join(lines)
+    s = trace.store
+    step = s.est_time_s * s.weights
+    order = np.argsort(-step, kind="stable")[:top]
+    # vocab lookups + float products only for the selected rows
+    rows = zip((s.est_time_s[order] * 1e6).tolist(), step[order].tolist(),
+               s.multiplicity[order].tolist(),
+               [s.kind.vocab[c] for c in s.kind.codes[order].tolist()],
+               [s.link_class.vocab[c]
+                for c in s.link_class.codes[order].tolist()],
+               [s.semantic.vocab[c] for c in s.semantic.codes[order].tolist()],
+               [s.scope.vocab[c][:48] for c in s.scope.codes[order].tolist()])
+    for dur, dt, mult, kind, link, sem, scope in rows:
+        lines.append(f"{t*1e6:10.1f} {dur:9.2f} {mult:5d} {kind:18s} "
+                     f"{link:16s} {sem:14s} {scope}")
+        t += dt
     return "\n".join(lines)
 
 
@@ -98,11 +169,11 @@ def session_table(traces, by: str = "kind_link", metric: str = "bytes",
 
     `traces` is any sequence of Trace (a TraceSession iterates as one).
     `metric` selects the cell value: bytes (GB), time (ms), or count.
-    The paper's cross-run experiment shape (UCX settings / MPI libraries /
-    NUMA bindings) as a single table — `diff.render_diff` stays the
-    two-column deep-dive.
+    `by="site"` keys rows on the interned op_name x kind x axes triple —
+    the per-callsite view.  The paper's cross-run experiment shape (UCX
+    settings / MPI libraries / NUMA bindings) as a single table —
+    `diff.render_diff` stays the two-column deep-dive.
     """
-    from repro.core.diff import diff_n
     traces = list(traces)
     if not traces:
         return "(empty session)"
@@ -131,23 +202,99 @@ def session_table(traces, by: str = "kind_link", metric: str = "bytes",
 # JSON / HTML
 # --------------------------------------------------------------------------
 
-def to_json(trace: Trace) -> str:
-    return json.dumps({
-        "label": trace.label,
-        "mesh_shape": trace.mesh_shape,
-        "mesh_axes": trace.mesh_axes,
-        "hlo_flops": trace.hlo_flops,
-        "hlo_bytes": trace.hlo_bytes,
-        "per_device_memory_bytes": trace.per_device_memory_bytes,
-        "events": [{
-            "name": e.name, "kind": e.kind, "bytes": e.operand_bytes,
-            "mult": e.multiplicity, "link": e.link_class,
-            "axes": e.axes, "semantic": e.semantic, "scope": e.scope,
-            "prim": e.jax_prim, "protocol": e.protocol,
-            "group_size": e.group_size, "num_groups": e.num_groups,
-            "est_time_us": e.est_time_s * 1e6,
-        } for e in trace.events],
-    }, indent=1)
+def _embed(value, depth: int) -> str:
+    """`json.dumps(value, indent=1)` re-indented for embedding at `depth`."""
+    return json.dumps(value, indent=1).replace("\n", "\n" + " " * depth)
+
+
+# one event object of the `indent=1` document; string args arrive
+# pre-escaped (with quotes), est_time_us pre-formatted via float repr —
+# the exact text `json.dumps` produces for the same values.
+_EVENT_TMPL = (
+    '  {\n   "name": %s,\n   "kind": %s,\n   "bytes": %d,\n   "mult": %d,\n'
+    '   "link": %s,\n   "axes": %s,\n   "semantic": %s,\n   "scope": %s,\n'
+    '   "prim": %s,\n   "protocol": %s,\n   "group_size": %d,\n'
+    '   "num_groups": %d,\n   "est_time_us": %s\n  }')
+
+
+def iter_json(trace: Trace, chunk_sites: int = 8192) -> Iterator[str]:
+    """Generator over the JSON document text, `chunk_sites` events at a
+    time — the streaming core of `to_json`/`write_json`.
+
+    Emits straight from store columns: per-vocab strings are escaped once
+    (axes tables pre-rendered as embedded arrays) and broadcast through
+    codes; numeric columns convert chunk-wise via `.tolist()`.  Output is
+    byte-identical to `json.dumps(..., indent=1)` over the per-event dict
+    (`engine="rows"`), which pure-Python-encodes when an indent is set.
+    """
+    s = trace.store
+    head = "{\n" + ",\n".join(
+        f' "{k}": {_embed(v, 1)}' for k, v in (
+            ("label", trace.label),
+            ("mesh_shape", list(trace.mesh_shape)),
+            ("mesh_axes", list(trace.mesh_axes)),
+            ("hlo_flops", trace.hlo_flops),
+            ("hlo_bytes", trace.hlo_bytes),
+            ("per_device_memory_bytes", trace.per_device_memory_bytes)))
+    if s.n == 0:
+        yield head + ',\n "events": []\n}'
+        return
+    yield head + ',\n "events": ['
+    kindv = [_esc_json(v) for v in s.kind.vocab]
+    linkv = [_esc_json(v) for v in s.link_class.vocab]
+    semv = [_esc_json(v) for v in s.semantic.vocab]
+    scopev = [_esc_json(v) for v in s.scope.vocab]
+    primv = [_esc_json(v) for v in s.jax_prim.vocab]
+    protov = [_esc_json(v) for v in s.protocol.vocab]
+    axesv = [_embed(list(t), 3) for t in s.axes_tables]
+    sep = "\n"
+    for lo in range(0, s.n, max(chunk_sites, 1)):
+        hi = min(lo + max(chunk_sites, 1), s.n)
+        rows = zip(
+            s.names[lo:hi],
+            s.kind.codes[lo:hi].tolist(), s.operand_bytes[lo:hi].tolist(),
+            s.multiplicity[lo:hi].tolist(),
+            s.link_class.codes[lo:hi].tolist(), s.axes_code[lo:hi].tolist(),
+            s.semantic.codes[lo:hi].tolist(), s.scope.codes[lo:hi].tolist(),
+            s.jax_prim.codes[lo:hi].tolist(),
+            s.protocol.codes[lo:hi].tolist(), s.group_size[lo:hi].tolist(),
+            s.num_groups[lo:hi].tolist(),
+            (s.est_time_s[lo:hi] * 1e6).tolist())
+        yield sep + ",\n".join(
+            _EVENT_TMPL % (_esc_json(nm), kindv[kc], ob, mu, linkv[lc],
+                           axesv[ac], semv[sc], scopev[scp], primv[pc],
+                           protov[prc], gs, ng, repr(us))
+            for (nm, kc, ob, mu, lc, ac, sc, scp, pc, prc, gs, ng, us)
+            in rows)
+        sep = ",\n"
+    yield "\n ]\n}"
+
+
+def to_json(trace: Trace, engine: str = "columnar") -> str:
+    if engine == "rows":
+        return json.dumps({
+            "label": trace.label,
+            "mesh_shape": trace.mesh_shape,
+            "mesh_axes": trace.mesh_axes,
+            "hlo_flops": trace.hlo_flops,
+            "hlo_bytes": trace.hlo_bytes,
+            "per_device_memory_bytes": trace.per_device_memory_bytes,
+            "events": [{
+                "name": e.name, "kind": e.kind, "bytes": e.operand_bytes,
+                "mult": e.multiplicity, "link": e.link_class,
+                "axes": e.axes, "semantic": e.semantic, "scope": e.scope,
+                "prim": e.jax_prim, "protocol": e.protocol,
+                "group_size": e.group_size, "num_groups": e.num_groups,
+                "est_time_us": e.est_time_s * 1e6,
+            } for e in trace.events],
+        }, indent=1)
+    return "".join(iter_json(trace))
+
+
+def write_json(trace: Trace, fp: IO[str], chunk_sites: int = 8192) -> None:
+    """Stream the JSON report to `fp` in bounded memory."""
+    for chunk in iter_json(trace, chunk_sites):
+        fp.write(chunk)
 
 
 _HTML_HEAD = """<!doctype html><meta charset="utf-8">
@@ -162,24 +309,27 @@ _HTML_HEAD = """<!doctype html><meta charset="utf-8">
 </style>"""
 
 
-def to_html(trace: Trace, mesh: MeshSpec) -> str:
-    """Self-contained HTML report (the interactive-visualizer analogue)."""
-    parts = [_HTML_HEAD % html_mod.escape(trace.label)]
-    parts.append(f"<h1>trace: {html_mod.escape(trace.label)}</h1>")
-    parts.append("<pre>" + html_mod.escape(summary(trace)) + "</pre>")
+def iter_html(trace: Trace, mesh: MeshSpec,
+              engine: str = "columnar") -> Iterator[str]:
+    """Generator over the HTML report sections (join with newlines)."""
+    yield _HTML_HEAD % html_mod.escape(trace.label)
+    yield f"<h1>trace: {html_mod.escape(trace.label)}</h1>"
+    yield "<pre>" + html_mod.escape(summary(trace)) + "</pre>"
 
     # top contenders
-    parts.append("<h2>top contenders (kind x link) — Table II analogue</h2>")
-    parts.append("<pre>" + html_mod.escape(top_contenders_table(trace)) + "</pre>")
-    parts.append("<h2>semantic (MPI-layer analogue)</h2>")
-    parts.append("<pre>" + html_mod.escape(semantic_table(trace)) + "</pre>")
+    yield "<h2>top contenders (kind x link) — Table II analogue</h2>"
+    yield "<pre>" + html_mod.escape(
+        top_contenders_table(trace, engine=engine)) + "</pre>"
+    yield "<h2>semantic (MPI-layer analogue)</h2>"
+    yield "<pre>" + html_mod.escape(
+        semantic_table(trace, engine=engine)) + "</pre>"
 
-    # comm matrix heatmaps per axis
+    # comm matrix heatmaps per axis (mesh-sized; shared between engines)
     mat = comm_matrix(mesh, trace)
     for axis in mesh.axes:
         red = reduce_matrix(mat, mesh, axis)
         peak = red.max() or 1.0
-        parts.append(f"<h2>comm matrix over axis '{axis}' (GB)</h2>")
+        yield f"<h2>comm matrix over axis '{axis}' (GB)</h2>"
         rows = ["<table class='hm'>"]
         for i in range(red.shape[0]):
             cells = []
@@ -190,9 +340,19 @@ def to_html(trace: Trace, mesh: MeshSpec) -> str:
                              f"title='{i}->{j}: {red[i,j]/1e9:.3f} GB'></td>")
             rows.append("<tr>" + "".join(cells) + "</tr>")
         rows.append("</table>")
-        parts.append("".join(rows))
+        yield "".join(rows)
 
     # timeline
-    parts.append("<h2>modeled timeline (top collectives)</h2>")
-    parts.append("<pre>" + html_mod.escape(timeline(trace)) + "</pre>")
-    return "\n".join(parts)
+    yield "<h2>modeled timeline (top collectives)</h2>"
+    yield "<pre>" + html_mod.escape(timeline(trace, engine=engine)) + "</pre>"
+
+
+def to_html(trace: Trace, mesh: MeshSpec, engine: str = "columnar") -> str:
+    """Self-contained HTML report (the interactive-visualizer analogue)."""
+    return "\n".join(iter_html(trace, mesh, engine))
+
+
+def write_html(trace: Trace, mesh: MeshSpec, fp: IO[str]) -> None:
+    """Stream the HTML report to `fp` section by section."""
+    for i, part in enumerate(iter_html(trace, mesh)):
+        fp.write(("\n" if i else "") + part)

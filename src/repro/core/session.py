@@ -16,9 +16,12 @@ CLI:
     python -m repro.core.session ingest OUT FILE [FILE ...] [--mesh 2,4]
                                         [--axes data,model] [--workers N]
     python -m repro.core.session show  PATH
-    python -m repro.core.session table PATH [--by kind_link|semantic] \\
+    python -m repro.core.session table PATH [--by kind_link|semantic|site] \\
                                             [--metric bytes|time|count]
-    python -m repro.core.session diff  PATH LABEL_A LABEL_B
+    python -m repro.core.session diff  PATH LABEL_A LABEL_B [--by ...|site]
+    python -m repro.core.session report PATH [LABEL] [--format json|html] \\
+                                        [--out FILE] [--stream] \\
+                                        [--chunk-sites N]
 """
 from __future__ import annotations
 
@@ -159,6 +162,35 @@ class TraceSession:
         from repro.core.diff import render_diff
         return render_diff(self.get(label_a), self.get(label_b), by=by)
 
+    def report(self, label: Optional[str] = None, fmt: str = "json",
+               fp=None, stream: bool = False, chunk_sites: int = 8192):
+        """Render one trace (default: the first) as JSON or HTML.
+
+        With `fp` set, writes to it — streamed through the chunked
+        columnar emitters when `stream=True` (bounded memory at 1M+
+        sites).  Without `fp`, returns the rendered string.
+        """
+        from repro.core import report as report_mod
+        if not self._traces:
+            raise KeyError(f"session {self.name!r} has no traces to report")
+        tr = self.get(label) if label is not None else self._traces[0]
+        mesh = MeshSpec(tr.mesh_shape, tr.mesh_axes)
+        if fp is None:
+            return report_mod.to_json(tr) if fmt == "json" \
+                else report_mod.to_html(tr, mesh)
+        if fmt == "json":
+            if stream:
+                report_mod.write_json(tr, fp, chunk_sites=chunk_sites)
+            else:
+                fp.write(report_mod.to_json(tr))
+        else:
+            if stream:
+                report_mod.write_html(tr, mesh, fp)
+            else:
+                fp.write(report_mod.to_html(tr, mesh))
+        fp.write("\n")
+        return None
+
     # -- bulk ingest ---------------------------------------------------------
 
     @classmethod
@@ -297,7 +329,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
 
     p = sub.add_parser("table", help="n-way comparison table")
     p.add_argument("path")
-    p.add_argument("--by", choices=("kind_link", "semantic"),
+    p.add_argument("--by", choices=("kind_link", "semantic", "site"),
                    default="kind_link")
     p.add_argument("--metric", choices=("bytes", "time", "count"),
                    default="bytes")
@@ -306,6 +338,22 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("path")
     p.add_argument("label_a")
     p.add_argument("label_b")
+    p.add_argument("--by", choices=("kind_link", "semantic", "site"),
+                   default="kind_link",
+                   help="alignment key; 'site' aligns per compiled callsite "
+                        "(op_name x kind x axes)")
+
+    p = sub.add_parser("report", help="render one trace of a session as "
+                                      "JSON or a self-contained HTML page")
+    p.add_argument("path")
+    p.add_argument("label", nargs="?", default=None,
+                   help="trace label (default: the session's first trace)")
+    p.add_argument("--format", choices=("json", "html"), default="json")
+    p.add_argument("--out", default=None, help="output file (default stdout)")
+    p.add_argument("--stream", action="store_true",
+                   help="stream through the chunked columnar emitters "
+                        "(bounded memory for very large traces)")
+    p.add_argument("--chunk-sites", type=int, default=8192)
 
     args = ap.parse_args(argv)
 
@@ -359,10 +407,37 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         print(sess.table(by=args.by, metric=args.metric))
     elif args.cmd == "diff":
         try:
-            print(sess.diff(args.label_a, args.label_b))
+            print(sess.diff(args.label_a, args.label_b, by=args.by))
         except KeyError as e:
             print(f"error: {e.args[0]}", file=sys.stderr)
             return 2
+    elif args.cmd == "report":
+        # resolve the label before touching the output path, so a typo'd
+        # label can't truncate a previous report
+        try:
+            label = args.label if args.label is not None else \
+                (sess.labels() or [None])[0]
+            if label is None:
+                raise KeyError(f"session {sess.name!r} has no traces "
+                               f"to report")
+            sess.get(label)
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            return 2
+        if args.out:
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            fp = open(args.out, "w")
+        else:
+            fp = sys.stdout
+        try:
+            sess.report(label, fmt=args.format, fp=fp,
+                        stream=args.stream, chunk_sites=args.chunk_sites)
+        finally:
+            if args.out:
+                fp.close()
+        if args.out:
+            print(f"wrote {args.format} report -> {args.out} "
+                  f"({os.path.getsize(args.out)//1024} KB)")
     return 0
 
 

@@ -334,18 +334,28 @@ class TraceStore:
                                 minlength=len(self.link_class.vocab))
         return float(per_class.max())
 
-    def _aggregate(self, inv: np.ndarray, labels: List[str]
-                   ) -> Dict[str, Dict[str, float]]:
-        """{label: {bytes, wire_bytes, count, time_s}} via bincount."""
-        nb = len(labels)
+    def _rollup_arrays(self, inv: np.ndarray, nb: int) -> np.ndarray:
+        """(4, nb) metric matrix [bytes, wire_bytes, count, time_s].
+
+        Each row is a bincount over `inv`, accumulating in *row order* —
+        the same add sequence the per-event dict reference performs per
+        key, so the float sums are bit-identical, not merely close.
+        """
         w = self.weights
         b = np.bincount(inv, weights=self.operand_bytes * w, minlength=nb)
         wire = np.bincount(inv, weights=self.wire_total * w, minlength=nb)
         c = np.bincount(inv, weights=w, minlength=nb)
         t = np.bincount(inv, weights=self.est_time_s * w, minlength=nb)
-        return {labels[i]: {"bytes": float(b[i]), "wire_bytes": float(wire[i]),
-                            "count": float(c[i]), "time_s": float(t[i])}
-                for i in range(nb)}
+        return np.stack([b, wire, c, t])
+
+    def _aggregate(self, inv: np.ndarray, labels: List[str]
+                   ) -> Dict[str, Dict[str, float]]:
+        """{label: {bytes, wire_bytes, count, time_s}} via bincount."""
+        m = self._rollup_arrays(inv, len(labels))
+        return {labels[i]: {"bytes": float(m[0, i]),
+                            "wire_bytes": float(m[1, i]),
+                            "count": float(m[2, i]), "time_s": float(m[3, i])}
+                for i in range(len(labels))}
 
     def _join_codes(self, cats: Sequence[Categorical], sep: str = "|"
                     ) -> Tuple[np.ndarray, List[str]]:
@@ -365,23 +375,65 @@ class TraceStore:
             labels.append(sep.join(reversed(parts)))
         return inv, labels
 
+    def axes_labels(self) -> Categorical:
+        """The axes payload as a categorical of joined labels ("data,model").
+
+        Distinct tuples joining to the same string are merged, so the codes
+        key on the *label* exactly like the per-event dict reference.
+        """
+        raw = [",".join(t) for t in self.axes_tables]
+        return Categorical(self.axes_code, raw).remap_table(raw)
+
+    def _codes_for(self, by: str) -> Tuple[np.ndarray, List[str]]:
+        """(inverse codes, labels) for a named rollup key."""
+        if by == "semantic":
+            # empty semantic rolls up as "other" (matches per-event path)
+            merged = self.semantic.remap(lambda v: v or "other")
+            uniq, inv = np.unique(merged.codes, return_inverse=True)
+            return inv, [merged.vocab[c] for c in uniq]
+        if by == "kind_link":
+            return self._join_codes((self.kind, self.link_class))
+        if by == "site":
+            # per-callsite key: interned op_name x kind x axes codes
+            return self._join_codes((self.op_name, self.kind,
+                                     self.axes_labels()))
+        return self._join_codes((self.semantic, self.kind, self.link_class))
+
+    def rollup(self, by: str) -> Tuple[List[str], np.ndarray]:
+        """(labels, (4, n_labels) matrix [bytes, wire_bytes, count, time_s]).
+
+        The array-shaped sibling of the dict rollups below — what the
+        columnar renderers and the code-aligned diff consume directly.
+        """
+        if self.n == 0:
+            return [], np.zeros((4, 0))
+        inv, labels = self._codes_for(by)
+        return labels, self._rollup_arrays(inv, len(labels))
+
     def by_kind_and_link(self) -> Dict[str, Dict[str, float]]:
-        inv, labels = self._join_codes((self.kind, self.link_class))
-        return self._aggregate(inv, labels)
+        return self._aggregate(*self._codes_for("kind_link"))
 
     def by_semantic(self) -> Dict[str, Dict[str, float]]:
-        # empty semantic rolls up as "other" (matches the per-event path)
         if self.n == 0:
             return {}
-        merged = self.semantic.remap(lambda v: v or "other")
-        uniq, inv = np.unique(merged.codes, return_inverse=True)
-        labels = [merged.vocab[c] for c in uniq]
-        return self._aggregate(inv, labels)
+        return self._aggregate(*self._codes_for("semantic"))
 
     def by_sem_kind_link(self) -> Dict[str, Dict[str, float]]:
-        inv, labels = self._join_codes(
-            (self.semantic, self.kind, self.link_class))
-        return self._aggregate(inv, labels)
+        return self._aggregate(*self._codes_for("sem_kind_link"))
+
+    def by_site(self) -> Dict[str, Dict[str, float]]:
+        return self._aggregate(*self._codes_for("site"))
+
+    def serial_est_time_s(self) -> float:
+        """Total modeled time accumulated in strict row order.
+
+        `total_est_time_s` uses `np.dot` (pairwise summation); the
+        renderers need the *sequential* sum so the columnar and per-event
+        paths print bit-identical totals.
+        """
+        if self.n == 0:
+            return 0.0
+        return float(np.add.accumulate(self.est_time_s * self.weights)[-1])
 
     # ---- comm-matrix edges -------------------------------------------------
 
@@ -592,3 +644,33 @@ class TraceStore:
         else:
             payload = cls._payload_from_v1(side)
         return cls(n, num, cat, **payload)
+
+
+# --------------------------------------------------------------------------
+# cross-store alignment (the code-aligned N-way diff core)
+# --------------------------------------------------------------------------
+
+def union_rollup(stores: Sequence[TraceStore], by: str
+                 ) -> Tuple[List[str], np.ndarray]:
+    """Shared-vocabulary rollup across N stores.
+
+    Each store rolls up once to (labels, metrics); the label lists are
+    interned into one union vocabulary (first-seen order across stores)
+    and every store's metric columns scatter into its slice of a
+    `(4, n_keys, n_stores)` tensor ([bytes, wire_bytes, count, time_s]).
+    Keys absent from a store stay zero — exactly the `dict.get(key, zero)`
+    semantics of the per-event alignment, without any string-keyed dicts
+    on the N-trace hot path.
+    """
+    per = [s.rollup(by) for s in stores]
+    all_labels: List[str] = []
+    for labels, _ in per:
+        all_labels.extend(labels)
+    remap, union = build_remap(all_labels)
+    out = np.zeros((4, len(union), len(stores)))
+    off = 0
+    for t, (labels, mat) in enumerate(per):
+        k = len(labels)
+        out[:, remap[off:off + k], t] = mat
+        off += k
+    return union, out

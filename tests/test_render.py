@@ -1,0 +1,286 @@
+"""Columnar renderer + code-aligned diff equivalence.
+
+The columnar emitters (`report.to_json`/`to_html`/`timeline`/
+`top_contenders_table`, engine="columnar" default) must produce output
+**byte-identical** to the retained per-event reference walk
+(engine="rows"), the streaming writers must reproduce the one-shot
+strings exactly, and `diff.diff_traces`/`diff_n` union-vocab alignment
+must return exactly the rows of the dict-aligned reference — including
+NEW/GONE classes, site-level keys, and empty-trace edge cases.
+"""
+import io
+import json
+
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core import diff, report
+from repro.core.events import CollectiveEvent, Trace, site_key
+from repro.core.store import union_rollup
+from repro.core.synth import synthetic_trace
+from repro.core.topology import MeshSpec
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def rand_trace(seed, n_sites=300, **kw):
+    return synthetic_trace(f"t{seed}", MESH, n_sites=n_sites, seed=seed, **kw)
+
+
+def mk_event(**kw):
+    base = dict(name="ar", kind="all-reduce", async_start=False,
+                operand_bytes=1 << 20, result_bytes=1 << 20, dtype="bf16",
+                replica_groups=[[0, 1, 2, 3]], group_size=4, num_groups=1,
+                op_name="jit(f)/layer/mlp/psum", computation="main",
+                link_class="ici.data", axes=("data",), semantic="ffn",
+                jax_prim="psum", scope="layer/mlp", protocol="rndv",
+                wire_bytes_per_device=1.5 * (1 << 20), est_time_s=1e-4)
+    base.update(kw)
+    return CollectiveEvent(**base)
+
+
+def empty_trace():
+    return Trace(label="empty", mesh_shape=(2,), mesh_axes=("data",),
+                 num_devices=2, events=[])
+
+
+# -- JSON ---------------------------------------------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_to_json_byte_identical(seed):
+    tr = rand_trace(seed)
+    assert report.to_json(tr) == report.to_json(tr, engine="rows")
+
+
+def test_to_json_is_valid_json():
+    tr = rand_trace(3, n_sites=257)
+    payload = json.loads(report.to_json(tr))
+    assert payload["label"] == "t3"
+    assert len(payload["events"]) == 257
+    ev = payload["events"][0]
+    assert set(ev) == {"name", "kind", "bytes", "mult", "link", "axes",
+                       "semantic", "scope", "prim", "protocol", "group_size",
+                       "num_groups", "est_time_us"}
+
+
+@pytest.mark.parametrize("chunk", [1, 7, 64, 10_000])
+def test_write_json_streams_identical_bytes(chunk):
+    tr = rand_trace(0, n_sites=203)
+    want = report.to_json(tr)
+    buf = io.StringIO()
+    report.write_json(tr, buf, chunk_sites=chunk)
+    assert buf.getvalue() == want
+    # streaming really chunks: more than one fragment for small chunk sizes
+    n_chunks = sum(1 for _ in report.iter_json(tr, chunk_sites=chunk))
+    assert n_chunks == 2 + -(-203 // chunk)
+
+
+def test_to_json_empty_trace():
+    tr = empty_trace()
+    assert report.to_json(tr) == report.to_json(tr, engine="rows")
+    assert json.loads(report.to_json(tr))["events"] == []
+
+
+def test_to_json_escapes_strings():
+    tr = Trace(label='we"ird\nlabel', mesh_shape=(2, 2),
+               mesh_axes=("data", "model"), num_devices=4,
+               events=[mk_event(op_name='a"b\\c', scope="s\tcope")])
+    out = report.to_json(tr)
+    assert out == report.to_json(tr, engine="rows")
+    assert json.loads(out)["events"][0]["scope"] == "s\tcope"
+
+
+# -- tables / timeline / HTML -------------------------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_tables_and_timeline_byte_identical(seed):
+    tr = rand_trace(seed)
+    assert report.top_contenders_table(tr) == \
+        report.top_contenders_table(tr, engine="rows")
+    assert report.semantic_table(tr) == \
+        report.semantic_table(tr, engine="rows")
+    assert report.timeline(tr) == report.timeline(tr, engine="rows")
+
+
+def test_timeline_top_limits_rows():
+    tr = rand_trace(1, n_sites=100)
+    assert len(report.timeline(tr, top=5).splitlines()) == 6
+    assert report.timeline(tr, top=5) == \
+        report.timeline(tr, top=5, engine="rows")
+
+
+def test_to_html_byte_identical_and_streamed():
+    tr = rand_trace(2, n_sites=400)
+    mesh = MESH
+    want = report.to_html(tr, mesh)
+    assert want == report.to_html(tr, mesh, engine="rows")
+    buf = io.StringIO()
+    report.write_html(tr, mesh, buf)
+    assert buf.getvalue() == want
+    assert want.startswith("<!doctype html>")
+    assert "<script src" not in want
+
+
+def test_tables_empty_trace():
+    tr = empty_trace()
+    assert report.top_contenders_table(tr) == \
+        report.top_contenders_table(tr, engine="rows")
+    assert report.timeline(tr) == report.timeline(tr, engine="rows")
+
+
+# -- code-aligned diff vs dict-aligned reference ------------------------------
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=6, deadline=None)
+def test_diff_traces_matches_reference(seed):
+    a = rand_trace(seed)
+    b = rand_trace(seed + 1, axis_weights=(3.0, 1.0))
+    for by in ("kind_link", "semantic", "site", "sem_kind_link"):
+        assert diff.diff_traces(a, b, by) == \
+            diff.diff_traces(a, b, by, engine="rows"), by
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=6, deadline=None)
+def test_diff_n_matches_reference(seed):
+    traces = [rand_trace(seed), rand_trace(seed + 1, axis_weights=(3.0, 1.0)),
+              rand_trace(seed + 2, axis_weights=(1.0, 3.0))]
+    for by in ("kind_link", "semantic", "site"):
+        fast = diff.diff_n(traces, by)
+        ref = diff.diff_n(traces, by, engine="rows")
+        assert fast == ref, by
+        assert [r.verdict() for r in fast] == [r.verdict() for r in ref]
+
+
+def test_diff_new_gone_classes():
+    """Classes present in only one trace verdict as NEW/GONE on both paths."""
+    a = Trace(label="a", mesh_shape=(2, 2), mesh_axes=("data", "model"),
+              num_devices=4, events=[mk_event()])
+    b = Trace(label="b", mesh_shape=(2, 2), mesh_axes=("data", "model"),
+              num_devices=4,
+              events=[mk_event(kind="all-gather", jax_prim="all_gather",
+                               op_name="jit(f)/layer/attn/all_gather")])
+    for by in ("kind_link", "site"):
+        rows = diff.diff_traces(a, b, by)
+        assert rows == diff.diff_traces(a, b, by, engine="rows")
+        verdicts = {r.key: r.verdict() for r in rows}
+        assert sorted(verdicts.values()) == ["GONE", "NEW"]
+    nrows = diff.diff_n([a, b], "kind_link")
+    assert nrows == diff.diff_n([a, b], "kind_link", engine="rows")
+    assert all(r.verdict() == "in 1/2" for r in nrows)
+
+
+def test_diff_empty_traces():
+    e = empty_trace()
+    t = rand_trace(4, n_sites=60)
+    assert diff.diff_n([], "kind_link") == []
+    for by in ("kind_link", "site"):
+        assert diff.diff_traces(e, t, by) == \
+            diff.diff_traces(e, t, by, engine="rows")
+        assert all(r.verdict() == "NEW" for r in diff.diff_traces(e, t, by))
+        assert diff.diff_n([e, t], by) == \
+            diff.diff_n([e, t], by, engine="rows")
+    assert diff.diff_n([e, e], "kind_link") == []
+
+
+def test_site_alignment_localizes_regression():
+    """Doubling one callsite's bytes is visible at site level, keyed on the
+    op_name that produced it — not just as a class-level wobble."""
+    a = rand_trace(7, n_sites=200)
+    b = rand_trace(7, n_sites=200)
+    ev = b.events[0]
+    ev.operand_bytes *= 4
+    b.invalidate()
+    changed = site_key(ev)
+    rows = {r.key: r for r in diff.diff_traces(a, b, by="site")}
+    assert rows == {r.key: r
+                    for r in diff.diff_traces(a, b, by="site",
+                                              engine="rows")}
+    assert rows[changed].bytes_b > rows[changed].bytes_a
+    # every site key carries the op_name x kind x axes triple
+    assert all(k.count("|") == 2 for k in rows)
+
+
+def test_union_rollup_shapes():
+    a, b = rand_trace(0, 50), rand_trace(1, 50)
+    keys, mats = union_rollup([a.store, b.store], "kind_link")
+    assert mats.shape == (4, len(keys), 2)
+    assert set(keys) == set(a.by_kind_and_link()) | set(b.by_kind_and_link())
+
+
+def test_session_table_by_site():
+    traces = [rand_trace(0, 80), rand_trace(1, 80)]
+    out = report.session_table(traces, by="site")
+    assert "by site" in out
+    assert "TOTAL modeled collective ms" in out
+
+
+# -- session CLI: report/diff subcommands -------------------------------------
+
+@pytest.fixture
+def session_path(tmp_path):
+    from repro.core.session import TraceSession
+    sess = TraceSession("unit", [rand_trace(0, 80), rand_trace(1, 80)])
+    return sess.save(str(tmp_path / "s.json"))
+
+
+def test_cli_report_json_stream(session_path, tmp_path, capsys):
+    from repro.core.session import _main
+    out = str(tmp_path / "report.json")
+    assert _main(["report", session_path, "t0", "--out", out,
+                  "--stream", "--chunk-sites", "16"]) == 0
+    assert "wrote json report" in capsys.readouterr().out
+    with open(out) as f:
+        payload = json.load(f)
+    assert payload["label"] == "t0"
+    assert len(payload["events"]) == 80
+
+
+def test_cli_report_html_default_first_trace(session_path, tmp_path):
+    from repro.core.session import _main
+    out = str(tmp_path / "report.html")
+    assert _main(["report", session_path, "--format", "html",
+                  "--out", out, "--stream"]) == 0
+    with open(out) as f:
+        html = f.read()
+    assert html.startswith("<!doctype html>")
+    assert "trace: t0" in html
+
+
+def test_cli_report_stdout_and_bad_label(session_path, capsys):
+    from repro.core.session import _main
+    assert _main(["report", session_path]) == 0
+    assert '"label": "t0"' in capsys.readouterr().out
+    assert _main(["report", session_path, "nope"]) == 2
+
+
+def test_cli_report_bad_label_keeps_existing_output(session_path, tmp_path):
+    """A typo'd label must not truncate a previously written report."""
+    from repro.core.session import _main
+    out = tmp_path / "keep.html"
+    out.write_text("precious previous report")
+    assert _main(["report", session_path, "nope", "--out", str(out)]) == 2
+    assert out.read_text() == "precious previous report"
+
+
+def test_cli_report_creates_output_directory(session_path, tmp_path):
+    from repro.core.session import _main
+    out = str(tmp_path / "new" / "dir" / "r.json")
+    assert _main(["report", session_path, "t1", "--out", out]) == 0
+    with open(out) as f:
+        assert json.load(f)["label"] == "t1"
+
+
+def test_cli_diff_by_site(session_path, capsys):
+    from repro.core.session import _main
+    assert _main(["diff", session_path, "t0", "t1", "--by", "site"]) == 0
+    out = capsys.readouterr().out
+    assert "by site" in out
+
+
+def test_cli_table_by_site(session_path, capsys):
+    from repro.core.session import _main
+    assert _main(["table", session_path, "--by", "site"]) == 0
+    assert "session comparison" in capsys.readouterr().out
