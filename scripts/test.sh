@@ -3,9 +3,9 @@
 # pytest (e.g. `scripts/test.sh tests/test_session.py -k roundtrip`).
 #
 #   TIER=smoke scripts/test.sh    # reproduce the CI job in one command:
-#                                 # analysis-layer tests, the ingest/render
-#                                 # smoke benches, and the bench-trajectory
-#                                 # gate (no jax compilation)
+#                                 # analysis-layer tests, the ingest/render/
+#                                 # shard/persist smoke benches, and the
+#                                 # bench-trajectory gate (no jax compilation)
 set -u
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -15,6 +15,7 @@ if [ "${TIER:-full}" = "smoke" ]; then
     python -m pytest -x -q \
         tests/test_ingest.py tests/test_render.py tests/test_report.py \
         tests/test_session.py tests/test_detect.py tests/test_tracer.py \
+        tests/test_shard.py \
         "$@"
     rc=$?
     if [ "$rc" -ne 0 ]; then
@@ -22,9 +23,13 @@ if [ "${TIER:-full}" = "smoke" ]; then
     fi
     python benchmarks/bench_overhead.py --ingest-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --render-only --sites 20000 || exit $?
+    python benchmarks/bench_overhead.py --shard-only --sites 50000 || exit $?
+    python benchmarks/bench_overhead.py --persist-only --sites 20000 || exit $?
     python scripts/bench_gate.py \
         results/BENCH_ingest_smoke.json:BENCH_ingest.json \
-        results/BENCH_render_smoke.json:BENCH_render.json
+        results/BENCH_render_smoke.json:BENCH_render.json \
+        results/BENCH_shard_smoke.json:BENCH_shard.json:0.5 \
+        results/BENCH_persist_smoke.json:BENCH_persist.json:0.65
     exit $?
 fi
 

@@ -27,7 +27,7 @@ of washing out in a kind x link rollup.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -124,9 +124,60 @@ def diff_traces(a: Trace, b: Trace, by: str = "kind_link",
             for i in (int(j) for j in order)]
 
 
-def render_diff(a: Trace, b: Trace, by: str = "kind_link") -> str:
-    rows = diff_traces(a, b, by)
-    lines = [f"trace diff: '{a.label}' -> '{b.label}'  (by {by})",
+def _filter_rows(rows: List[DiffRow], top: Optional[int] = None,
+                 only_regressed: bool = False) -> List[DiffRow]:
+    """Row filter shared by the rendered and JSON diff outputs.
+
+    `only_regressed` keeps classes that grew past the verdict threshold
+    or are new in B; `top` then truncates to the N largest |byte delta|
+    (the rows are already delta-sorted by `diff_traces`).
+    """
+    if only_regressed:
+        rows = [r for r in rows
+                if r.verdict() == "NEW" or r.verdict().startswith("GREW")]
+    if top is not None:
+        rows = rows[:max(top, 0)]
+    return rows
+
+
+def diff_json(a: Trace, b: Trace, by: str = "kind_link",
+              top: Optional[int] = None,
+              only_regressed: bool = False) -> Dict[str, object]:
+    """Machine-readable pairwise diff (the tooling-facing sibling of
+    `render_diff`): one dict per aligned row plus modeled-time totals.
+
+    `bytes_ratio` is `null` for rows new in B (the rendered verdict says
+    NEW; infinity is not valid JSON).
+    """
+    rows = _filter_rows(diff_traces(a, b, by), top, only_regressed)
+    ta, tb = a.total_est_time_s(), b.total_est_time_s()
+    return {
+        "a": a.label,
+        "b": b.label,
+        "by": _norm_by(by),
+        "top": top,
+        "only_regressed": only_regressed,
+        "total_time_a_s": ta,
+        "total_time_b_s": tb,
+        "rows": [{
+            "key": r.key,
+            "bytes_a": r.bytes_a, "bytes_b": r.bytes_b,
+            "count_a": r.count_a, "count_b": r.count_b,
+            "time_a_s": r.time_a, "time_b_s": r.time_b,
+            "bytes_ratio": None if (r.bytes_a == 0 and r.bytes_b > 0)
+            else r.bytes_ratio,
+            "verdict": r.verdict(),
+        } for r in rows],
+    }
+
+
+def render_diff(a: Trace, b: Trace, by: str = "kind_link",
+                top: Optional[int] = None,
+                only_regressed: bool = False) -> str:
+    rows = _filter_rows(diff_traces(a, b, by), top, only_regressed)
+    mode = by + (", regressed only" if only_regressed else "") \
+        + (f", top {top}" if top is not None else "")
+    lines = [f"trace diff: '{a.label}' -> '{b.label}'  (by {mode})",
              f"{'key':42s} {'GB a':>9s} {'GB b':>9s} {'cnt a':>7s} "
              f"{'cnt b':>7s} {'ms a':>8s} {'ms b':>8s}  verdict"]
     for r in rows:

@@ -79,6 +79,30 @@ class HloOpStats:
     bytes_by_scope: Dict[str, float] = field(default_factory=dict)
     flops_by_scope: Dict[str, float] = field(default_factory=dict)
 
+    @classmethod
+    def merged(cls, parts: List["HloOpStats"]) -> "HloOpStats":
+        """Combine per-shard stats (sharded ingest; see hlo_parser).
+
+        Every contribution is an integer-valued float (byte/FLOP counts x
+        integer multiplicities), so the partial-sum reassociation is exact
+        below 2^53 and the merge equals a serial accumulation.  Scope dicts
+        keep first-seen order across shards — the serial insertion order.
+        """
+        out = cls()
+        for p in parts:
+            out.n_transpose += p.n_transpose
+            out.n_fusion += p.n_fusion
+            out.n_convert += p.n_convert
+            out.n_reshape += p.n_reshape
+            out.transpose_bytes += p.transpose_bytes
+            out.flops += p.flops
+            out.bytes_accessed += p.bytes_accessed
+            for k, v in p.bytes_by_scope.items():
+                out.bytes_by_scope[k] = out.bytes_by_scope.get(k, 0.0) + v
+            for k, v in p.flops_by_scope.items():
+                out.flops_by_scope[k] = out.flops_by_scope.get(k, 0.0) + v
+        return out
+
 
 class Trace:
     """A complete multi-layer communication trace of one compiled step.

@@ -14,7 +14,10 @@ transfer the step will execute, including:
 """
 from __future__ import annotations
 
+import os
 import re
+import sys
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
@@ -471,7 +474,7 @@ _FAST_STATS_RE = re.compile(
     r"\((.*)$")
 
 
-def parse_hlo_store(text: str, num_devices: int):
+def parse_hlo_store(text: str, num_devices: int, shard_ctx: Optional[Dict] = None):
     """Single-pass fast path: collective op lines -> `TraceStore` columns.
 
     Equivalent to `parse_hlo` + `TraceStore.from_events` but ~an order of
@@ -485,13 +488,25 @@ def parse_hlo_store(text: str, num_devices: int):
     wire bytes, est time, semantic, ...) are left blank for
     `costmodel.annotate_store` / `attribution.attribute_store`.
 
+    `shard_ctx` is the shared module context produced by
+    `split_hlo_module` when `text` is one computation chunk of a larger
+    module: it carries the whole-module execution multiplicities and
+    fusion-body set, which cannot be derived from a chunk alone (the
+    entry computation, while conditions, and fusion call sites may live
+    in other chunks).
+
     Returns `(store, stats)` with `stats` identical to the reference path.
     """
     from repro.core.attribution import split_op_name
     from repro.core.store import Categorical, TraceStore
 
     comps = _split_computations(text)
-    mult = _multiplicities(comps)
+    if shard_ctx is None:
+        mult = _multiplicities(comps)
+        ctx_fusion = ()
+    else:
+        mult = shard_ctx["mult"]
+        ctx_fusion = shard_ctx["fusion_bodies"]
     stats = HloOpStats()
 
     # -- prepass: fusion bodies + symbol tables.  The full table is only
@@ -499,7 +514,7 @@ def parse_hlo_store(text: str, num_devices: int):
     # charging) and fusion markers are the only rows ever read from it.
     shapes_by_comp: Dict[str, Dict[str, str]] = {}
     kinds_by_comp: Dict[str, Dict[str, str]] = {}
-    fusion_bodies: set = set()
+    fusion_bodies: set = set(ctx_fusion)
     for name, comp in comps.items():
         if name == "__entry__":
             continue
@@ -549,9 +564,15 @@ def parse_hlo_store(text: str, num_devices: int):
     scope_by_op: List[str] = []        # stats scope, parallel to op_vocab
     type_cache: Dict[str, Tuple[int, int, bool]] = {}   # -> (bytes, dtc, tuple?)
     pbytes_cache: Dict[str, int] = {}                   # param type -> bytes
+    # raw-attr-text front caches over *value-keyed* table interning: the raw
+    # string lookup keeps the hot path cheap, while the value index ensures
+    # two spellings of the same groups (iota vs explicit) share one table —
+    # the invariant `TraceStore.merge` relies on to reproduce a serial parse.
     rg_cache: Dict[Optional[str], Tuple[int, int, int, int]] = {}
+    rg_value_idx: Dict[Tuple, int] = {}
     group_tables: List[List[List[int]]] = []
     stp_cache: Dict[str, int] = {}
+    stp_value_idx: Dict[Tuple, int] = {}
     stp_tables: List[List[Tuple[int, int]]] = []
 
     coll_search = _COLL_HINT_RE.search
@@ -687,8 +708,11 @@ def parse_hlo_store(text: str, num_devices: int):
                         if im.group(4) else None
                     groups = resolve_iota_groups(g, s, dims, perm)
                     gsz = max(len(gg) for gg in groups) if groups else 1
-                    gc = len(group_tables)
-                    group_tables.append(groups)
+                    vkey = tuple(tuple(gg) for gg in groups)
+                    gc = rg_value_idx.get(vkey)
+                    if gc is None:
+                        gc = rg_value_idx[vkey] = len(group_tables)
+                        group_tables.append(groups)
                     gent = rg_cache[rkey] = (gc, gsz, len(groups), s)
             else:
                 em = _EXPLICIT_RG_RE.search(rest)
@@ -697,8 +721,11 @@ def parse_hlo_store(text: str, num_devices: int):
                 if gent is None:
                     groups = _parse_replica_groups(rkey or "", num_devices)
                     gsz = max(len(gg) for gg in groups) if groups else 1
-                    gc = len(group_tables)
-                    group_tables.append(groups)
+                    vkey = tuple(tuple(gg) for gg in groups)
+                    gc = rg_value_idx.get(vkey)
+                    if gc is None:
+                        gc = rg_value_idx[vkey] = len(group_tables)
+                        group_tables.append(groups)
                     gent = rg_cache[rkey] = (gc, gsz, len(groups), 0)
             gc, gsz, ng, iota_s = gent
 
@@ -711,8 +738,12 @@ def parse_hlo_store(text: str, num_devices: int):
                     sc_code = stp_cache.get(skey, -1)
                     if sc_code < 0:
                         pairs = _parse_stp(rest)
-                        sc_code = stp_cache[skey] = len(stp_tables)
-                        stp_tables.append(pairs)
+                        vkey = tuple(pairs)
+                        sc_code = stp_value_idx.get(vkey, -1)
+                        if sc_code < 0:
+                            sc_code = stp_value_idx[vkey] = len(stp_tables)
+                            stp_tables.append(pairs)
+                        stp_cache[skey] = sc_code
 
             # payload bytes (same conventions as `_operand_bytes`)
             if base == "all-gather":
@@ -783,4 +814,415 @@ def parse_hlo_store(text: str, num_devices: int):
         stp_code=np.asarray(stp_code, dtype=np.int32),
         axes_tables=[()] if n else [],
         axes_code=np.zeros(n, dtype=np.int32))
+    return store, stats
+
+
+# --------------------------------------------------------------------------
+# sharded single-module ingest: splitter + worker fan-out + merge
+# --------------------------------------------------------------------------
+
+# a single module above this size is auto-sharded across workers by
+# `tracer.trace_from_hlo` (roughly the point where parse time clears the
+# process fan-out overhead)
+AUTO_SHARD_BYTES = 8 << 20
+
+
+def auto_shards(n_bytes: int, cpus: Optional[int] = None) -> int:
+    """Shard count for a module of `n_bytes` (1 = keep the serial path).
+
+    Small modules and single-core boxes stay serial; large ones split into
+    a couple of chunks per usable core so the contiguous partition can
+    balance one oversized computation (e.g. a giant while body) against
+    many small ones.
+    """
+    if cpus is None:
+        cpus = os.cpu_count() or 1
+    if cpus < 2 or n_bytes < AUTO_SHARD_BYTES:
+        return 1
+    return int(min(4 * cpus, max(2 * cpus, n_bytes // AUTO_SHARD_BYTES)))
+
+
+# `{`-at-end-of-line *candidates* — a literal-prefix scan (C-level
+# fastsearch); each hit is verified against the exact
+# `_split_computations` header condition before it becomes a chunk
+# boundary (a false split would orphan half a computation, a miss only
+# costs balance)
+_HDR_CAND_RE = re.compile(r"\{[ \t\r]*\n")
+_EDGE_NAME_RE = re.compile(r"%?[\w.\-]+")
+_WHILE_SCAN_RE = re.compile(r"while\(")
+_FUSION_SCAN_RE = re.compile(r"fusion\(")
+_EDGE_LITS = ("calls=", "to_apply=")
+_REF_LITS = ("calls=", "to_apply=", "body=", "condition=")
+_NAME_CHARS = frozenset(
+    "abcdefghijklmnopqrstuvwxyzABCDEFGHIJKLMNOPQRSTUVWXYZ0123456789_.-")
+
+
+def _line_at(text: str, pos: int) -> str:
+    ls = text.rfind("\n", 0, pos) + 1
+    le = text.find("\n", pos)
+    return text[ls:] if le < 0 else text[ls:le]
+
+
+def _iter_call_edges(text: str, start: int, end: int):
+    """Yield `calls=`/`to_apply=` callee names in text[start:end] via
+    literal fastsearch (the alternation regex is ~10x slower here)."""
+    for lit in _EDGE_LITS:
+        pos = text.find(lit, start, end)
+        step = len(lit)
+        while pos >= 0:
+            m = _EDGE_NAME_RE.match(text, pos + step, end)
+            if m:
+                yield m.group(0).lstrip("%")
+            pos = text.find(lit, pos + step, end)
+
+
+def _find_refs_to(text: str, name: str):
+    """Offsets of `calls=|to_apply=|body=|condition=` references to `name`
+    (exact-name matches only), again via literal fastsearch."""
+    for lit in _REF_LITS:
+        for target in (lit + "%" + name, lit + name):
+            step = len(target)
+            pos = text.find(target)
+            while pos >= 0:
+                nxt = pos + step
+                if nxt >= len(text) or text[nxt] not in _NAME_CHARS:
+                    yield pos
+                pos = text.find(target, pos + 1)
+
+
+def _ref_callers_global(text: str, comp_at) -> Dict[str, List[str]]:
+    """{callee name: [caller comps]} over every call/while reference.
+
+    One pass over the four ref literals — used instead of per-name
+    `_find_refs_to` scans when many computations contain whiles, where
+    the targeted approach would rescan the module once per chain node.
+    """
+    out: Dict[str, List[str]] = {}
+    for lit in _REF_LITS:
+        step = len(lit)
+        pos = text.find(lit)
+        while pos >= 0:
+            m = _EDGE_NAME_RE.match(text, pos + step)
+            if m:
+                caller = comp_at(pos)
+                if caller is not None:
+                    out.setdefault(m.group(0).lstrip("%"), []).append(caller)
+            pos = text.find(lit, pos + step)
+    return out
+
+
+def _split_spans(text: str, n_shards: int):
+    """(chunk spans, shared context) for a sharded parse of one module.
+
+    Everything runs as C-level regex scans over the raw text (no
+    per-line Python loop): verified computation headers give the chunk
+    boundaries, and the multiplicity context is rebuilt from *targeted*
+    scans — all while edges, plus call edges only where they can change
+    the fixpoint (chains activating a while-containing computation, and
+    the closure reached from loop bodies).  Edges from multiplicity-1
+    computations elsewhere are no-ops in the serial max-propagation
+    (they assign the default), so dropping them preserves the result.
+    """
+    import bisect
+
+    starts: List[int] = []
+    names: List[str] = []
+    entry_name: Optional[str] = None
+    cand_ends = [m.start() for m in _HDR_CAND_RE.finditer(text)]
+    tail = text.rstrip()
+    if tail.endswith("{"):                      # no trailing newline at EOF
+        cand_ends.append(len(tail) - 1)
+    for brace in cand_ends:
+        ls = text.rfind("\n", 0, brace) + 1
+        stripped = text[ls:brace + 1].strip()
+        # the exact `_split_computations` header condition
+        if not (stripped.endswith("{") and "->" in stripped
+                and "=" not in stripped.split("(")[0]):
+            continue
+        head = stripped
+        is_entry = head.startswith("ENTRY")
+        if is_entry:
+            head = head[len("ENTRY"):].lstrip()
+        name = head.split("(")[0].strip().lstrip("%").strip()
+        if not name:
+            continue
+        starts.append(ls)
+        names.append(name)
+        if is_entry:
+            entry_name = name
+    ends = starts[1:] + [len(text)]
+    # duplicate names: the serial line parser keeps the *last* definition's
+    # content at the *first* occurrence's position (dict overwrite preserves
+    # key order), so chunks carry the last span, ordered by first sighting
+    last = {name: i for i, name in enumerate(names)}
+    live: List[int] = []
+    ordered_seen: set = set()
+    for name in names:
+        if name not in ordered_seen:
+            ordered_seen.add(name)
+            live.append(last[name])
+    span_of = {names[i]: (starts[i], ends[i]) for i in live}
+
+    def comp_at(pos: int) -> Optional[str]:
+        i = bisect.bisect_right(starts, pos) - 1
+        if i < 0 or last[names[i]] != i:
+            return None
+        return names[i]
+
+    # -- while edges (body/cond x trip count), callers by offset ------------
+    edges: Dict[str, List[Tuple[str, int]]] = {}
+    tc_cache: Dict[str, int] = {}
+    while_callers: List[str] = []
+    for m in _WHILE_SCAN_RE.finditer(text):
+        line = _line_at(text, m.start())
+        wm = _WHILE_RE.search(line)
+        cm = _COND_RE.search(line)
+        if not (wm and cm):
+            continue
+        caller = comp_at(m.start())
+        if caller is None:
+            continue
+        cname = cm.group(1)
+        tc = tc_cache.get(cname)
+        if tc is None:
+            span = span_of.get(cname)
+            tc = 1
+            if span is not None:
+                for cm2 in _CONST_INT_RE.finditer(text, span[0], span[1]):
+                    tc = max(tc, int(cm2.group(1)))
+            tc_cache[cname] = tc
+        edges.setdefault(caller, []).append((wm.group(1), tc))
+        edges[caller].append((cname, tc))
+        while_callers.append(caller)
+
+    # -- backward: activate while-containing computations -------------------
+    # (a while edge only fires once its caller is reachable from the entry,
+    # so pull in the call chains that reach each while caller)
+    scanned_back: set = set()
+    frontier = list(while_callers)
+    # targeted per-name scans are cheapest for the common 1-2 loop chains;
+    # with many while-containing computations, bucket every reference once
+    # instead of rescanning the module per chain node
+    ref_map = _ref_callers_global(text, comp_at) \
+        if len(set(frontier) - {entry_name}) > 4 else None
+    while frontier:
+        w = frontier.pop()
+        if w in scanned_back or w == entry_name:
+            continue
+        scanned_back.add(w)
+        if ref_map is not None:
+            callers = ref_map.get(w, ())
+        else:
+            callers = [comp_at(pos) for pos in _find_refs_to(text, w)]
+        for caller in callers:
+            if caller is None or caller == w:
+                continue
+            edges.setdefault(caller, []).append((w, 1))
+            frontier.append(caller)
+
+    # -- forward: closure out of loop bodies/conditions ---------------------
+    # (these run with multiplicity > 1; their callees inherit it)
+    scanned_fwd: set = set()
+    edge_seen: set = set()
+    frontier = [callee for es in list(edges.values()) for callee, _k in es]
+    while frontier:
+        c = frontier.pop()
+        if c in scanned_fwd:
+            continue
+        scanned_fwd.add(c)
+        span = span_of.get(c)
+        if span is None:
+            continue
+        for callee in _iter_call_edges(text, span[0], span[1]):
+            if (c, callee) not in edge_seen:
+                edge_seen.add((c, callee))
+                edges.setdefault(c, []).append((callee, 1))
+                frontier.append(callee)
+
+    # -- fixpoint (same max-propagation as `_multiplicities`) ---------------
+    name_set = set(span_of)
+    if entry_name is None:
+        mult = {name: 1 for name in name_set}
+    else:
+        mult = {entry_name: 1}
+        changed = True
+        passes = 0
+        while changed and passes < 50:
+            changed = False
+            passes += 1
+            for name in name_set:
+                if name not in mult:
+                    continue
+                base = mult[name]
+                for callee, k in edges.get(name, ()):
+                    new = base * k
+                    if callee in name_set and mult.get(callee, 0) < new:
+                        mult[callee] = new
+                        changed = True
+
+    # -- fusion bodies (the byte-accounting exclusion set) ------------------
+    fusion_bodies: List[str] = []
+    fb_seen: set = set()
+    for m in _FUSION_SCAN_RE.finditer(text):
+        line = _line_at(text, m.start())
+        if "/*" in line:
+            line = _COMMENT_RE.sub("", line)
+        lm = _OPLINE_RE.match(line)
+        if lm and lm.group(3) == "fusion":
+            fm = _CALLS_RE.search(line)
+            if fm and fm.group(1) not in fb_seen:
+                fb_seen.add(fm.group(1))
+                fusion_bodies.append(fm.group(1))
+
+    ctx: Dict[str, object] = {
+        "mult": {k2: int(v) for k2, v in mult.items()},
+        "fusion_bodies": fusion_bodies,
+    }
+
+    # -- contiguous partition of live spans, balanced by byte length --------
+    k = max(1, min(n_shards, len(live)))
+    weights = [ends[i] - starts[i] for i in live]
+    total = sum(weights) or 1
+    shard_spans: List[List[Tuple[int, int]]] = [[] for _ in range(k)]
+    ci, acc = 0, 0
+    for i, w in zip(live, weights):
+        shard_spans[ci].append((starts[i], ends[i]))
+        acc += w
+        if ci < k - 1 and acc >= (ci + 1) * total / k:
+            ci += 1
+    # coalesce adjacent spans inside each shard into one (start, end)
+    spans: List[Tuple[int, int]] = []
+    for group in shard_spans:
+        if not group:
+            continue
+        run_s, run_e = group[0]
+        out_s, out_e = run_s, run_e
+        merged: List[Tuple[int, int]] = []
+        for s, e in group[1:]:
+            if s == out_e:
+                out_e = e
+            else:
+                merged.append((out_s, out_e))
+                out_s, out_e = s, e
+        merged.append((out_s, out_e))
+        spans.append(tuple(merged))
+    return spans, ctx
+
+
+def split_hlo_module(text: str, n_shards: int
+                     ) -> Tuple[List[str], Dict[str, object]]:
+    """Partition module text into computation chunks + shared context.
+
+    Chunks are *contiguous* runs of whole computations balanced by size,
+    so concatenating the per-chunk parses reproduces the serial row order
+    exactly.  The returned context carries the only two pieces of
+    whole-module state a chunk cannot derive locally:
+
+      * `mult` — execution multiplicity per computation (the while-loop
+        trip-count fixpoint needs the entry computation and every
+        condition body, which may land in other chunks), and
+      * `fusion_bodies` — computations reached via `fusion(...) calls=`
+        (excluded from byte accounting; the calling fusion op may be in
+        a different chunk than its body).
+    """
+    spans, ctx = _split_spans(text, n_shards)
+    chunks = ["".join(text[s:e] for s, e in group) for group in spans]
+    return chunks, ctx
+
+
+# (text, num_devices, ctx) inherited copy-on-write by fork workers, so the
+# module text never rides through the job pipe; the lock serializes
+# concurrent sharded parses so one caller's fork cannot inherit another's
+# state (slicing foreign text with local spans would merge garbage)
+_FORK_SHARD_STATE = None
+_FORK_SHARD_LOCK = threading.Lock()
+
+# spawn workers re-import __main__; in parents spawn cannot bootstrap
+# (embedded interpreters, stdin scripts) every worker dies before reading
+# the call queue and `ex.map` can block forever — a no-op probe with this
+# bound converts the hang into the in-process fallback
+_SPAWN_PROBE_TIMEOUT_S = 30.0
+
+
+def _parse_shard_spans(spans):
+    """Fork worker: slice the inherited module text and parse the chunk."""
+    text, num_devices, ctx = _FORK_SHARD_STATE
+    chunk = "".join(text[s:e] for s, e in spans)
+    return parse_hlo_store(chunk, num_devices, shard_ctx=ctx)
+
+
+def _parse_shard_job(job):
+    """Worker: parse one computation chunk under the shared module context."""
+    chunk, num_devices, ctx = job
+    return parse_hlo_store(chunk, num_devices, shard_ctx=ctx)
+
+
+def parse_hlo_store_sharded(text: str, num_devices: int, shards: int,
+                            max_workers: Optional[int] = None):
+    """Parse one large module as `shards` computation chunks, in parallel.
+
+    Each chunk runs `parse_hlo_store` (in a worker process when a pool is
+    available, else in-process) and `TraceStore.merge` concatenates the
+    shard stores — byte-identical to a serial `parse_hlo_store` of the
+    whole text.  Fork workers inherit the text copy-on-write and receive
+    only (start, end) spans; spawn fallbacks ship chunk strings.
+    `max_workers=0` forces the in-process path (tests, restricted
+    environments).
+
+    Returns `(store, stats)` like `parse_hlo_store`.
+    """
+    global _FORK_SHARD_STATE
+    from repro.core.store import TraceStore
+
+    span_groups, ctx = _split_spans(text, shards)
+    if len(span_groups) <= 1:
+        return parse_hlo_store(text, num_devices)
+    results = None
+    if max_workers != 0:
+        if max_workers is None:
+            max_workers = min(len(span_groups), os.cpu_count() or 1)
+        import multiprocessing
+        import pickle
+        from concurrent.futures import ProcessPoolExecutor
+        from concurrent.futures.process import BrokenProcessPool
+        # fork when safe (cheap, no re-import, text inherited): the guard
+        # mirrors session.from_hlo — a jax-loaded parent is multithreaded,
+        # and forking a multithreaded process can deadlock workers.
+        method = "fork" if (
+            "fork" in multiprocessing.get_all_start_methods()
+            and "jax" not in sys.modules) else "spawn"
+        try:
+            mp_ctx = multiprocessing.get_context(method)
+            if method == "fork":
+                with _FORK_SHARD_LOCK:
+                    _FORK_SHARD_STATE = (text, num_devices, ctx)
+                    try:
+                        with ProcessPoolExecutor(
+                                max_workers=max_workers,
+                                mp_context=mp_ctx) as ex:
+                            results = list(ex.map(_parse_shard_spans,
+                                                  span_groups))
+                    finally:
+                        _FORK_SHARD_STATE = None
+            else:
+                jobs = [("".join(text[s:e] for s, e in g), num_devices, ctx)
+                        for g in span_groups]
+                ex = ProcessPoolExecutor(max_workers=max_workers,
+                                         mp_context=mp_ctx)
+                try:
+                    ex.submit(int).result(timeout=_SPAWN_PROBE_TIMEOUT_S)
+                    results = list(ex.map(_parse_shard_job, jobs))
+                    ex.shutdown()
+                except Exception:
+                    ex.shutdown(wait=False, cancel_futures=True)
+                    raise OSError("spawn pool unusable")
+        except (BrokenProcessPool, pickle.PicklingError, ImportError,
+                OSError):
+            results = None    # pool unavailable here -> in-process shards
+    if results is None:
+        results = [_parse_shard_job(
+            ("".join(text[s:e] for s, e in g), num_devices, ctx))
+            for g in span_groups]
+    store = TraceStore.merge([r[0] for r in results])
+    stats = HloOpStats.merged([r[1] for r in results])
     return store, stats

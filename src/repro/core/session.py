@@ -15,10 +15,12 @@ CLI:
     python -m repro.core.session demo  [--out PATH] [--format json|npz]
     python -m repro.core.session ingest OUT FILE [FILE ...] [--mesh 2,4]
                                         [--axes data,model] [--workers N]
+                                        [--shards N]
     python -m repro.core.session show  PATH
     python -m repro.core.session table PATH [--by kind_link|semantic|site] \\
                                             [--metric bytes|time|count]
-    python -m repro.core.session diff  PATH LABEL_A LABEL_B [--by ...|site]
+    python -m repro.core.session diff  PATH LABEL_A LABEL_B [--by ...|site] \\
+                                        [--top N] [--only-regressed] [--json]
     python -m repro.core.session report PATH [LABEL] [--format json|html] \\
                                         [--out FILE] [--stream] \\
                                         [--chunk-sites N]
@@ -34,6 +36,7 @@ from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.events import HloOpStats, Trace
+from repro.core.hlo_parser import AUTO_SHARD_BYTES
 from repro.core.store import TraceStore
 from repro.core.topology import Hardware, MeshSpec, V5E
 
@@ -82,12 +85,14 @@ def _ingest_one(job) -> Trace:
     Module-level so it pickles into `ProcessPoolExecutor` workers; the
     returned `Trace` ships back as its columnar store (rows stay lazy).
     """
-    label, text, mesh, hw, engine = job
+    label, text, mesh, hw, engine, shards = job
     from repro.core.tracer import trace_from_hlo
-    return trace_from_hlo(text, mesh, label=label, hw=hw, engine=engine)
+    return trace_from_hlo(text, mesh, label=label, hw=hw, engine=engine,
+                          shards=shards)
 
 
-def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str) -> List:
+def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str,
+                 shards: Optional[int]) -> List:
     jobs = []
     for it in items:
         if isinstance(it, (tuple, list)):
@@ -96,7 +101,7 @@ def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str) -> List:
             label = os.path.splitext(os.path.basename(str(it)))[0]
             with open(it) as f:
                 text = f.read()
-        jobs.append((label, text, mesh, hw, engine))
+        jobs.append((label, text, mesh, hw, engine, shards))
     return jobs
 
 
@@ -158,9 +163,23 @@ class TraceSession:
         from repro.core.report import session_table
         return session_table(self._traces, by=by, metric=metric)
 
-    def diff(self, label_a: str, label_b: str, by: str = "kind_link") -> str:
-        from repro.core.diff import render_diff
-        return render_diff(self.get(label_a), self.get(label_b), by=by)
+    def diff(self, label_a: str, label_b: str, by: str = "kind_link",
+             top: Optional[int] = None, only_regressed: bool = False,
+             as_json: bool = False) -> str:
+        """Pairwise diff between two labels.
+
+        `top` keeps only the N largest-|byte-delta| rows, `only_regressed`
+        keeps NEW/GREW rows, and `as_json` returns the machine-readable
+        payload (`diff.diff_json`) instead of the rendered table.
+        """
+        from repro.core.diff import diff_json, render_diff
+        a, b = self.get(label_a), self.get(label_b)
+        if as_json:
+            return json.dumps(diff_json(a, b, by=by, top=top,
+                                        only_regressed=only_regressed),
+                              indent=1)
+        return render_diff(a, b, by=by, top=top,
+                           only_regressed=only_regressed)
 
     def report(self, label: Optional[str] = None, fmt: str = "json",
                fp=None, stream: bool = False, chunk_sites: int = 8192):
@@ -198,7 +217,8 @@ class TraceSession:
                  items: Sequence[Union[str, Tuple[str, str]]],
                  mesh: MeshSpec, *, hw: Hardware = V5E,
                  engine: str = "columnar",
-                 max_workers: Optional[int] = None) -> "TraceSession":
+                 max_workers: Optional[int] = None,
+                 shards: Optional[int] = None) -> "TraceSession":
         """Ingest many HLO dumps into one session, in parallel.
 
         `items` are either `(label, hlo_text)` pairs or paths to HLO text
@@ -207,12 +227,22 @@ class TraceSession:
         process; results come back as columnar stores.  Falls back to
         serial ingest when the pool is unavailable (restricted
         environments) or for a single file.
+
+        `shards` additionally splits each *single* module per-computation
+        across workers (`None` = auto above `hlo_parser.AUTO_SHARD_BYTES`,
+        `1` = serial).  When the per-file pool is used, *auto*-sharding is
+        pinned to 1 — the file fan-out already owns the cores — but an
+        explicit `shards=N` is honored inside each file worker (the
+        caller opted into the oversubscription).
         """
-        jobs = _ingest_jobs(items, mesh, hw, engine)
+        pool_files = max_workers is None or max_workers > 1
         if max_workers is None:
-            max_workers = min(len(jobs), os.cpu_count() or 1)
+            max_workers = min(len(items), os.cpu_count() or 1)
+        pool_files = pool_files and max_workers > 1 and len(items) > 1
+        jobs = _ingest_jobs(items, mesh, hw, engine,
+                            (shards or 1) if pool_files else shards)
         traces: Optional[List[Trace]] = None
-        if max_workers > 1 and len(jobs) > 1:
+        if pool_files:
             import multiprocessing
             import pickle
             from concurrent.futures import ProcessPoolExecutor
@@ -227,7 +257,10 @@ class TraceSession:
                     traces = list(ex.map(_ingest_one, jobs))
             except (BrokenProcessPool, pickle.PicklingError, ImportError,
                     OSError):
-                traces = None     # pool unavailable here -> serial fallback
+                # pool unavailable here -> serial per file (texts already
+                # in memory); single-module sharding may still parallelize
+                jobs = [j[:5] + (shards,) for j in jobs]
+                traces = None
         if traces is None:
             traces = [_ingest_one(j) for j in jobs]
         return cls(name, traces)
@@ -323,6 +356,11 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--axes", default="data,model",
                    help="mesh axis names, comma-separated")
     p.add_argument("--workers", type=int, default=None)
+    p.add_argument("--shards", type=int, default=None,
+                   help="split each single module per-computation across "
+                        "this many parse shards (default: auto above "
+                        f"{AUTO_SHARD_BYTES >> 20}MB, or serial when the "
+                        "multi-file pool owns the cores; 1 = serial)")
 
     p = sub.add_parser("show", help="per-trace summaries of a saved session")
     p.add_argument("path")
@@ -342,6 +380,13 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                    default="kind_link",
                    help="alignment key; 'site' aligns per compiled callsite "
                         "(op_name x kind x axes)")
+    p.add_argument("--top", type=int, default=None,
+                   help="keep only the N largest-|byte-delta| rows")
+    p.add_argument("--only-regressed", action="store_true",
+                   help="keep only rows that grew or are new in B")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit a machine-readable JSON diff instead of the "
+                        "rendered table")
 
     p = sub.add_parser("report", help="render one trace of a session as "
                                       "JSON or a self-contained HTML page")
@@ -384,7 +429,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         mesh = MeshSpec(shape, axes)
         sess = TraceSession.from_hlo(
             os.path.splitext(os.path.basename(args.out))[0],
-            args.files, mesh, max_workers=args.workers)
+            args.files, mesh, max_workers=args.workers, shards=args.shards)
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         path = sess.save(args.out)
         print(f"session '{sess.name}': ingested {len(sess)} traces -> {path}")
@@ -407,7 +452,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         print(sess.table(by=args.by, metric=args.metric))
     elif args.cmd == "diff":
         try:
-            print(sess.diff(args.label_a, args.label_b, by=args.by))
+            print(sess.diff(args.label_a, args.label_b, by=args.by,
+                            top=args.top, only_regressed=args.only_regressed,
+                            as_json=args.as_json))
         except KeyError as e:
             print(f"error: {e.args[0]}", file=sys.stderr)
             return 2

@@ -227,6 +227,139 @@ class TraceStore:
                    stp_tables=stp_tables, stp_code=stp_code,
                    axes_tables=axes_tables, axes_code=axes_code)
 
+    @classmethod
+    def empty(cls) -> "TraceStore":
+        """A zero-row store (identity element of `merge`)."""
+        return cls(
+            0, {col: np.empty(0, dtype=dt) for col, dt in _NUM_COLS},
+            {col: Categorical(np.empty(0, dtype=np.int32), [])
+             for col in _CAT_COLS},
+            names=[], group_tables=[],
+            group_code=np.empty(0, dtype=np.int32),
+            stp_tables=[], stp_code=np.empty(0, dtype=np.int32),
+            axes_tables=[], axes_code=np.empty(0, dtype=np.int32))
+
+    @classmethod
+    def merge(cls, stores: Sequence["TraceStore"]) -> "TraceStore":
+        """Concatenate shard stores into one (sharded single-module ingest).
+
+        Rows keep shard order; every interned vocabulary (categorical
+        columns, replica-group / permute / axes tables) is re-interned
+        across shards in first-seen order via `build_remap`, and the
+        shard codes are remapped through the resulting tables.  Because a
+        serial parse also interns in first-seen row order (and keys the
+        payload tables by *value*), merging the chunk parses of
+        `split_hlo_module` is byte-identical to parsing the whole module
+        serially — pinned by tests/test_shard.py and the `--shard-only`
+        bench gate.
+        """
+        stores = list(stores)
+        if not stores:
+            return cls.empty()
+        if len(stores) == 1:
+            return stores[0]
+        n = sum(s.n for s in stores)
+        num = {col: np.concatenate([getattr(s, col) for s in stores])
+               for col, _dt in _NUM_COLS}
+
+        cat: Dict[str, Categorical] = {}
+        for col in _CAT_COLS:
+            entries: List[str] = []
+            for s in stores:
+                entries.extend(getattr(s, col).vocab)
+            remap, union = build_remap(entries)
+            parts = []
+            off = 0
+            for s in stores:
+                c = getattr(s, col)
+                k = len(c.vocab)
+                parts.append(remap[off:off + k][c.codes] if len(c.codes)
+                             else np.empty(0, dtype=np.int32))
+                off += k
+            cat[col] = Categorical(np.concatenate(parts), union)
+
+        def intern_tables(tables_of, key_fn):
+            index: Dict = {}
+            tables: List = []
+            maps: List[np.ndarray] = []
+            for s in stores:
+                ts = tables_of(s)
+                m = np.empty(len(ts), dtype=np.int32)
+                for i, t in enumerate(ts):
+                    key = key_fn(t)
+                    j = index.get(key)
+                    if j is None:
+                        j = index[key] = len(tables)
+                        tables.append(t)
+                    m[i] = j
+                maps.append(m)
+            return tables, maps
+
+        group_tables, g_maps = intern_tables(
+            lambda s: s.group_tables,
+            lambda t: tuple(tuple(int(x) for x in g) for g in t))
+        group_code = np.concatenate(
+            [m[s.group_code] if len(s.group_code)
+             else np.empty(0, dtype=np.int32)
+             for s, m in zip(stores, g_maps)])
+        stp_tables, s_maps = intern_tables(
+            lambda s: s.stp_tables,
+            lambda t: tuple((int(a), int(b)) for a, b in t))
+        stp_parts = []
+        for s, m in zip(stores, s_maps):
+            c = s.stp_code
+            if not len(c):
+                stp_parts.append(np.empty(0, dtype=np.int32))
+            elif len(m):
+                stp_parts.append(np.where(
+                    c >= 0, m[np.clip(c, 0, None)], np.int32(-1)))
+            else:
+                stp_parts.append(c)
+        stp_code = np.concatenate(stp_parts)
+        axes_tables, a_maps = intern_tables(
+            lambda s: s.axes_tables, lambda t: tuple(t))
+        axes_code = np.concatenate(
+            [m[s.axes_code] if len(s.axes_code)
+             else np.empty(0, dtype=np.int32)
+             for s, m in zip(stores, a_maps)])
+
+        names: List[str] = []
+        for s in stores:
+            names.extend(s.names)
+        return cls(n, num, cat, names=names,
+                   group_tables=group_tables, group_code=group_code,
+                   stp_tables=stp_tables, stp_code=stp_code,
+                   axes_tables=axes_tables, axes_code=axes_code)
+
+    def identical(self, other: "TraceStore") -> bool:
+        """Field-for-field equality, codes and vocabs included.
+
+        Stricter than row-wise equality: two stores whose rows match but
+        whose interned vocab/table *order* differs are not `identical`.
+        This is the shard-equivalence pin (merge(shards) vs serial parse).
+        """
+        if self.n != other.n or self.names != other.names:
+            return False
+        for col, _dt in _NUM_COLS:
+            if not np.array_equal(getattr(self, col), getattr(other, col)):
+                return False
+        for col in _CAT_COLS:
+            a, b = getattr(self, col), getattr(other, col)
+            if a.vocab != b.vocab or not np.array_equal(a.codes, b.codes):
+                return False
+        def norm_groups(tables):
+            return [tuple(tuple(int(x) for x in g) for g in t)
+                    for t in tables]
+        def norm_stp(tables):
+            return [tuple((int(a), int(b)) for a, b in t) for t in tables]
+        return (norm_groups(self.group_tables) == norm_groups(other.group_tables)
+                and np.array_equal(self.group_code, other.group_code)
+                and norm_stp(self.stp_tables) == norm_stp(other.stp_tables)
+                and np.array_equal(self.stp_code, other.stp_code)
+                and [tuple(a) for a in self.axes_tables]
+                == [tuple(a) for a in other.axes_tables]
+                and np.array_equal(self.axes_code, other.axes_code))
+
     # ---- per-row compatibility views ---------------------------------------
 
     @property

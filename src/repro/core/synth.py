@@ -129,7 +129,8 @@ _SCOPES = ("layer/mlp", "layer/attn", "layer/moe/dispatch", "embed", "loss",
 
 def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
                   body_fraction: float = 0.25,
-                  backward_fraction: float = 0.4) -> str:
+                  backward_fraction: float = 0.4,
+                  n_computations: int = 1) -> str:
     """Generate compiled-HLO-shaped text with `n_sites` collective op sites.
 
     The module has the structure ingest cares about: an ENTRY computation,
@@ -139,6 +140,13 @@ def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
     (plain + transposed) and explicit replica groups.  op_name metadata is
     drawn from a small vocabulary, heavily duplicated — the property the
     vocab-level attribution fast path exploits.
+
+    `n_computations > 1` switches to the *multi-computation* shape the
+    sharded-ingest path is built for (one giant module, many
+    computations): the non-loop sites are spread over that many `%stage<k>`
+    computations reached from the entry via `call(...) to_apply=` — the
+    per-computation units `hlo_parser.split_hlo_module` partitions across
+    workers.  `n_computations=1` keeps the classic single-entry layout.
     """
     rng = np.random.default_rng(seed)
     kinds = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
@@ -217,6 +225,27 @@ def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
         "  ROOT %t = (s32[], bf16[256,512]) tuple(%i2, %x)",
         "}",
         "",
+    ]
+
+    n_stages = max(int(n_computations) - 1, 0)
+    stage_sites: list = []
+    if n_stages and entry_sites:
+        n_stages = min(n_stages, len(entry_sites))
+        step = (len(entry_sites) + n_stages - 1) // n_stages
+        stage_sites = [entry_sites[j:j + step]
+                       for j in range(0, len(entry_sites), step)]
+        entry_sites = []
+        for k, sites in enumerate(stage_sites):
+            lines.append(f"%stage{k} (p{k}: bf16[256,512]) -> "
+                         "bf16[256,512] {")
+            lines.append("  %x = bf16[256,512] parameter(0)")
+            for i in sites:
+                lines.extend(site_lines(i))
+            lines.append(f"  ROOT %r{k} = bf16[256,512] copy(%x)")
+            lines.append("}")
+            lines.append("")
+
+    lines += [
         "ENTRY %main (x: bf16[256,512]) -> bf16[256,512] {",
         "  %x = bf16[256,512] parameter(0)",
         "  %zero = s32[] constant(0)",
@@ -224,6 +253,9 @@ def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
         "  %w = (s32[], bf16[256,512]) while(%init), condition=%cond, "
         "body=%body",
     ]
+    for k in range(len(stage_sites)):
+        lines.append(f"  %call{k} = bf16[256,512] call(%x), "
+                     f"to_apply=%stage{k}")
     for i in entry_sites:
         lines.extend(site_lines(i))
     lines += [

@@ -23,7 +23,9 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
                    hw: Hardware = V5E,
                    cost_analysis: Optional[Dict[str, float]] = None,
                    memory_analysis: Any = None,
-                   engine: str = "columnar") -> Trace:
+                   engine: str = "columnar",
+                   shards: Optional[int] = None,
+                   shard_workers: Optional[int] = None) -> Trace:
     """Assemble a multi-layer trace from compiled HLO text.
 
     `engine` selects the ingest pipeline:
@@ -33,9 +35,23 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
       * `"rows"` — the per-event reference path (dataclass per site,
         `annotate_event` / `attribute_event` per event).  Kept as the
         equivalence baseline; see tests/test_ingest.py.
+
+    `shards` (columnar only) splits one giant module per-computation
+    across worker processes (`hlo_parser.parse_hlo_store_sharded`), with
+    the shard stores merged back byte-identically to a serial parse.
+    `None` auto-shards above `hlo_parser.AUTO_SHARD_BYTES`; `1` forces
+    the serial path.  `shard_workers` caps the pool (0 = in-process).
     """
     if engine == "columnar":
-        store, stats = hlo_parser.parse_hlo_store(hlo_text, mesh.num_devices)
+        n_shards = shards if shards is not None \
+            else hlo_parser.auto_shards(len(hlo_text))
+        if n_shards > 1:
+            store, stats = hlo_parser.parse_hlo_store_sharded(
+                hlo_text, mesh.num_devices, n_shards,
+                max_workers=shard_workers)
+        else:
+            store, stats = hlo_parser.parse_hlo_store(
+                hlo_text, mesh.num_devices)
         costmodel.annotate_store(store, mesh, hw)
         attribution.attribute_store(store)
         tr = Trace.from_store(label, mesh.shape, mesh.axes, mesh.num_devices,

@@ -176,3 +176,67 @@ def test_session_cli_demo(tmp_path, capsys):
     assert "session comparison" in captured
     assert _main(["show", out_path]) == 0
     assert _main(["table", out_path, "--by", "semantic"]) == 0
+
+
+# -- diff UX: --top / --only-regressed / --json ------------------------------
+
+def test_diff_top_and_only_regressed_filters():
+    from repro.core.diff import diff_traces, render_diff
+    a, b = rand_trace(0, 400), rand_trace(1, 400)
+    rows = diff_traces(a, b)
+    assert len(rows) > 3
+    out_top = render_diff(a, b, top=2)
+    # header + column line + 2 rows + TOTAL line
+    assert len(out_top.splitlines()) == 5
+    assert "top 2" in out_top
+    out_reg = render_diff(a, b, only_regressed=True)
+    body = out_reg.splitlines()[2:-1]
+    assert all(("GREW" in ln) or ("NEW" in ln) for ln in body)
+    assert "regressed only" in out_reg
+    # default output unchanged (pinned header shape)
+    assert render_diff(a, b).splitlines()[0] == \
+        "trace diff: 'rand0' -> 'rand1'  (by kind_link)"
+
+
+def test_diff_json_machine_readable():
+    from repro.core.diff import diff_json, diff_traces
+    a, b = rand_trace(0, 300), rand_trace(2, 300)
+    payload = json.loads(json.dumps(diff_json(a, b, by="site", top=5)))
+    assert payload["a"] == "rand0" and payload["b"] == "rand2"
+    assert payload["by"] == "site" and payload["top"] == 5
+    assert len(payload["rows"]) == 5
+    ref = diff_traces(a, b, by="site")[:5]
+    for row, r in zip(payload["rows"], ref):
+        assert row["key"] == r.key
+        assert row["bytes_a"] == r.bytes_a and row["bytes_b"] == r.bytes_b
+        assert row["verdict"] == r.verdict()
+        if r.bytes_a == 0 and r.bytes_b > 0:
+            assert row["bytes_ratio"] is None
+    assert payload["total_time_a_s"] == a.total_est_time_s()
+
+
+def test_session_diff_cli_flags(tmp_path, capsys):
+    from repro.core.session import _main
+    out = str(tmp_path / "sess.json")
+    demo_session(n_sites=150).save(out)
+    assert _main(["diff", out, "dp8-baseline", "dp2xtp4",
+                  "--by", "site", "--top", "3", "--json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["by"] == "site"
+    assert len(payload["rows"]) <= 3
+    assert _main(["diff", out, "dp8-baseline", "dp2xtp4",
+                  "--only-regressed"]) == 0
+    assert "regressed only" in capsys.readouterr().out
+
+
+# -- persistence: exact round-trips (the --persist-only bench invariant) -----
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_session_roundtrip_stores_identical(tmp_path, ext):
+    sess = TraceSession("rt", [rand_trace(0, 150), rand_trace(1, 150)])
+    path = sess.save(str(tmp_path / f"rt.{ext}"))
+    loaded = TraceSession.load(path)
+    assert loaded.labels() == sess.labels()
+    for a, b in zip(sess, loaded):
+        assert a.store.identical(b.store)
+        assert a.total_est_time_s() == b.total_est_time_s()

@@ -1,0 +1,339 @@
+"""Sharded single-module ingest: splitter + `TraceStore.merge` equivalence.
+
+The shard path (`hlo_parser.split_hlo_module` -> per-chunk
+`parse_hlo_store(shard_ctx=...)` -> `TraceStore.merge` +
+`HloOpStats.merged`) must be *byte-identical* to a serial
+`parse_hlo_store` of the whole module — same row order, same interned
+vocab/table order, same codes — across shard counts, multi-computation
+layouts, empty shards, and schema round-trips.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core import hlo_parser
+from repro.core.events import HloOpStats
+from repro.core.store import TraceStore
+from repro.core.synth import synthetic_hlo
+from repro.core.topology import MeshSpec
+from repro.core.tracer import trace_from_hlo
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def parse_shards(text: str, k: int):
+    """(serial parse, merged shard parse) of the same module text."""
+    serial_store, serial_stats = hlo_parser.parse_hlo_store(text, 8)
+    chunks, ctx = hlo_parser.split_hlo_module(text, k)
+    parsed = [hlo_parser.parse_hlo_store(c, 8, shard_ctx=ctx)
+              for c in chunks]
+    merged = TraceStore.merge([s for s, _ in parsed])
+    mstats = HloOpStats.merged([s for _, s in parsed])
+    return (serial_store, serial_stats), (merged, mstats), chunks
+
+
+def assert_stores_identical(a: TraceStore, b: TraceStore):
+    """`identical` plus field-level asserts so a failure names the field."""
+    assert a.n == b.n
+    assert a.names == b.names
+    from repro.core.store import _CAT_COLS, _NUM_COLS
+    for col, _dt in _NUM_COLS:
+        np.testing.assert_array_equal(getattr(a, col), getattr(b, col),
+                                      err_msg=col)
+    for col in _CAT_COLS:
+        ca, cb = getattr(a, col), getattr(b, col)
+        assert ca.vocab == cb.vocab, col
+        np.testing.assert_array_equal(ca.codes, cb.codes, err_msg=col)
+    assert [tuple(map(tuple, t)) for t in a.group_tables] == \
+           [tuple(map(tuple, t)) for t in b.group_tables]
+    np.testing.assert_array_equal(a.group_code, b.group_code)
+    assert [tuple(map(tuple, t)) for t in a.stp_tables] == \
+           [tuple(map(tuple, t)) for t in b.stp_tables]
+    np.testing.assert_array_equal(a.stp_code, b.stp_code)
+    assert [tuple(t) for t in a.axes_tables] == \
+           [tuple(t) for t in b.axes_tables]
+    np.testing.assert_array_equal(a.axes_code, b.axes_code)
+    assert a.identical(b)
+
+
+# -- merge(shards) == serial parse, property-style over seeds x layouts ------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_merge_equals_serial_parse(seed):
+    text = synthetic_hlo(n_sites=300, seed=seed, n_computations=5)
+    for k in (2, 3, 7):
+        (s_store, s_stats), (m_store, m_stats), chunks = parse_shards(text, k)
+        assert len(chunks) > 1
+        assert_stores_identical(m_store, s_store)
+        assert dataclasses.asdict(m_stats) == dataclasses.asdict(s_stats)
+
+
+@pytest.mark.parametrize("n_computations", [1, 4])
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_merge_equals_serial_across_layouts(n_computations, k):
+    text = synthetic_hlo(n_sites=250, seed=2, n_computations=n_computations)
+    (s_store, s_stats), (m_store, m_stats), _ = parse_shards(text, k)
+    assert_stores_identical(m_store, s_store)
+    assert dataclasses.asdict(m_stats) == dataclasses.asdict(s_stats)
+
+
+def test_split_preserves_while_multiplicity_across_chunks():
+    """Trip counts apply even when body/cond land in another chunk than
+    the entry: the shared context carries the multiplicity fixpoint."""
+    text = synthetic_hlo(n_sites=200, seed=5, trip_count=9,
+                         n_computations=6)
+    (s_store, _), (m_store, _), chunks = parse_shards(text, 4)
+    assert len(chunks) >= 3
+    assert int(m_store.multiplicity.max()) == 9
+    assert_stores_identical(m_store, s_store)
+
+
+def test_split_while_behind_call_chain():
+    """A while reached only through `call(...) to_apply=` chains still
+    gets its trip count (the splitter's backward-activation scan)."""
+    text = "\n".join([
+        "HloModule nested",
+        "",
+        "%cond (p: (s32[], f32[4])) -> pred[] {",
+        "  %p = (s32[], f32[4]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        "  %n = s32[] constant(7)",
+        "  ROOT %lt = pred[] compare(%i, %n), direction=LT",
+        "}",
+        "",
+        "%loop_body (p: (s32[], f32[4])) -> (s32[], f32[4]) {",
+        "  %p = (s32[], f32[4]) parameter(0)",
+        "  %i = s32[] get-tuple-element(%p), index=0",
+        "  %x = f32[4] get-tuple-element(%p), index=1",
+        "  %ar = f32[4] all-reduce(%x), channel_id=1, "
+        "replica_groups=[2,4]<=[8], "
+        'metadata={op_name="jit(f)/loop/psum"}',
+        "  %one = s32[] constant(1)",
+        "  %i2 = s32[] add(%i, %one)",
+        "  ROOT %t = (s32[], f32[4]) tuple(%i2, %x)",
+        "}",
+        "",
+        "%middle (q: f32[4]) -> f32[4] {",
+        "  %x = f32[4] parameter(0)",
+        "  %zero = s32[] constant(0)",
+        "  %init = (s32[], f32[4]) tuple(%zero, %x)",
+        "  %w = (s32[], f32[4]) while(%init), condition=%cond, "
+        "body=%loop_body",
+        "  ROOT %out = f32[4] get-tuple-element(%w), index=1",
+        "}",
+        "",
+        "ENTRY %main (x: f32[4]) -> f32[4] {",
+        "  %x = f32[4] parameter(0)",
+        "  ROOT %c = f32[4] call(%x), to_apply=%middle",
+        "}",
+        "",
+    ])
+    (s_store, s_stats), (m_store, m_stats), _ = parse_shards(text, 3)
+    assert s_store.n == 1
+    assert int(s_store.multiplicity[0]) == 7
+    assert_stores_identical(m_store, s_store)
+    assert dataclasses.asdict(m_stats) == dataclasses.asdict(s_stats)
+
+
+def test_split_duplicate_computation_names():
+    """The serial parser's dict overwrite keeps the *last* definition's
+    content at the *first* occurrence's position; the splitter must
+    reproduce both, or merged row/vocab order diverges."""
+    def comp(name, kind, i):
+        return [
+            f"%{name} (p: f32[8]) -> f32[8] {{",
+            "  %x = f32[8] parameter(0)",
+            f"  %c.{i} = f32[8] {kind}(%x), channel_id={i}, "
+            "replica_groups=[2,4]<=[8], "
+            f'metadata={{op_name="jit(f)/{name}/op"}}',
+            "}",
+            "",
+        ]
+    text = "\n".join(
+        ["HloModule dup", ""]
+        + comp("f", "reduce-scatter", 1)      # shadowed definition
+        + comp("g", "all-gather", 2)
+        + comp("f", "all-reduce", 3)          # wins, at %f's first position
+        + [
+            "ENTRY %main (x: f32[8]) -> f32[8] {",
+            "  %x = f32[8] parameter(0)",
+            "  %a = f32[8] call(%x), to_apply=%f",
+            "  ROOT %b = f32[8] call(%a), to_apply=%g",
+            "}",
+            "",
+        ])
+    serial, sstats = hlo_parser.parse_hlo_store(text, 8)
+    assert serial.kind.vocab == ["all-reduce", "all-gather"]
+    for k in (1, 2, 3):
+        chunks, ctx = hlo_parser.split_hlo_module(text, k)
+        parsed = [hlo_parser.parse_hlo_store(c, 8, shard_ctx=ctx)
+                  for c in chunks]
+        merged = TraceStore.merge([s for s, _ in parsed])
+        assert_stores_identical(merged, serial)
+        assert dataclasses.asdict(HloOpStats.merged([s for _, s in parsed])) \
+            == dataclasses.asdict(sstats)
+
+
+def test_split_many_call_chain_whiles():
+    """>4 while-containing computations flips the splitter's backward
+    activation onto the single global reference pass; multiplicities and
+    the merged store must still match serial exactly."""
+    def while_comp(i):
+        return [
+            f"%cond{i} (p: (s32[], f32[4])) -> pred[] {{",
+            "  %p = (s32[], f32[4]) parameter(0)",
+            "  %i = s32[] get-tuple-element(%p), index=0",
+            f"  %n = s32[] constant({i + 2})",
+            "  ROOT %lt = pred[] compare(%i, %n), direction=LT",
+            "}", "",
+            f"%body{i} (p: (s32[], f32[4])) -> (s32[], f32[4]) {{",
+            "  %p = (s32[], f32[4]) parameter(0)",
+            "  %x = f32[4] get-tuple-element(%p), index=1",
+            f"  %ar{i} = f32[4] all-reduce(%x), channel_id={i + 1}, "
+            "replica_groups=[2,4]<=[8], "
+            'metadata={op_name="jit(f)/l/psum"}',
+            "  %i0 = s32[] get-tuple-element(%p), index=0",
+            "  %one = s32[] constant(1)",
+            "  %i2 = s32[] add(%i0, %one)",
+            "  ROOT %t = (s32[], f32[4]) tuple(%i2, %x)",
+            "}", "",
+            f"%wrap{i} (q: f32[4]) -> f32[4] {{",
+            "  %x = f32[4] parameter(0)",
+            "  %zero = s32[] constant(0)",
+            "  %init = (s32[], f32[4]) tuple(%zero, %x)",
+            f"  %w = (s32[], f32[4]) while(%init), condition=%cond{i}, "
+            f"body=%body{i}",
+            "  ROOT %out = f32[4] get-tuple-element(%w), index=1",
+            "}", "",
+        ]
+    lines = ["HloModule manywhiles", ""]
+    for i in range(8):
+        lines += while_comp(i)
+    lines += ["ENTRY %main (x: f32[4]) -> f32[4] {",
+              "  %x = f32[4] parameter(0)"]
+    for i in range(8):
+        lines.append(f"  %c{i} = f32[4] call(%x), to_apply=%wrap{i}")
+    lines += ["  ROOT %r = f32[4] copy(%x)", "}", ""]
+    text = "\n".join(lines)
+    (s_store, s_stats), (m_store, m_stats), _ = parse_shards(text, 5)
+    assert sorted(int(m) for m in s_store.multiplicity) == \
+        sorted(range(2, 10))
+    assert_stores_identical(m_store, s_store)
+    assert dataclasses.asdict(m_stats) == dataclasses.asdict(s_stats)
+
+
+# -- merge edge cases --------------------------------------------------------
+
+def test_merge_empty_and_single():
+    empty = TraceStore.merge([])
+    assert empty.n == 0 and empty.rows() == []
+    text = synthetic_hlo(n_sites=120, seed=1, n_computations=3)
+    store, _ = hlo_parser.parse_hlo_store(text, 8)
+    assert TraceStore.merge([store]) is store
+    # interleaved zero-row stores are identity elements
+    merged = TraceStore.merge(
+        [TraceStore.empty(), store, TraceStore.empty()])
+    assert_stores_identical(merged, store)
+
+
+def test_merge_stats_empty_and_single():
+    assert dataclasses.asdict(HloOpStats.merged([])) == \
+           dataclasses.asdict(HloOpStats())
+    _, stats = hlo_parser.parse_hlo_store(
+        synthetic_hlo(n_sites=50, seed=0), 8)
+    assert dataclasses.asdict(HloOpStats.merged([stats])) == \
+           dataclasses.asdict(stats)
+
+
+def test_merge_after_schema_roundtrips():
+    """Shards round-tripped through the v2 dict and the v1 (per-row)
+    layout still merge identically to the serial parse."""
+    text = synthetic_hlo(n_sites=180, seed=4, n_computations=4)
+    (s_store, _), _, chunks = parse_shards(text, 3)
+    ctx = hlo_parser.split_hlo_module(text, 3)[1]
+    shard_stores = [hlo_parser.parse_hlo_store(c, 8, shard_ctx=ctx)[0]
+                    for c in chunks]
+
+    v2 = [TraceStore.from_dict(s.to_dict()) for s in shard_stores]
+    assert_stores_identical(TraceStore.merge(v2), s_store)
+
+    def to_v1(store):
+        d = store.to_dict()
+        v1 = {k: d[k] for k in ("n", "num")}
+        v1["version"] = 1
+        v1["cat"] = {k: v for k, v in d["cat"].items() if k != "op_name"}
+        v1["names"] = store.names
+        v1["op_names"] = store.op_names
+        v1["axes"] = [list(a) for a in store.axes]
+        v1["replica_groups"] = store.replica_groups
+        v1["source_target_pairs"] = [
+            None if p is None else [list(pair) for pair in p]
+            for p in store.source_target_pairs]
+        return v1
+
+    v1 = [TraceStore.from_dict(to_v1(s)) for s in shard_stores]
+    assert_stores_identical(TraceStore.merge(v1), s_store)
+
+
+# -- splitter invariants -----------------------------------------------------
+
+def test_split_chunks_cover_all_computations():
+    text = synthetic_hlo(n_sites=150, seed=3, n_computations=6)
+    comps = {n for n in hlo_parser._split_computations(text)
+             if n != "__entry__"}
+    chunks, ctx = hlo_parser.split_hlo_module(text, 4)
+    seen = set()
+    for c in chunks:
+        seen |= {n for n in hlo_parser._split_computations(c)
+                 if n != "__entry__"}
+    assert seen == comps
+    assert set(ctx["mult"]) <= comps
+    # fewer computations than shards: one chunk per computation, no empties
+    many, _ = hlo_parser.split_hlo_module(text, 100)
+    assert 1 < len(many) <= len(comps)
+
+
+def test_auto_shards_thresholds():
+    assert hlo_parser.auto_shards(1 << 20, cpus=8) == 1
+    assert hlo_parser.auto_shards(hlo_parser.AUTO_SHARD_BYTES, cpus=1) == 1
+    assert hlo_parser.auto_shards(64 << 20, cpus=4) >= 8
+
+
+# -- end-to-end sharded ingest ----------------------------------------------
+
+def test_trace_from_hlo_sharded_identical():
+    text = synthetic_hlo(n_sites=400, seed=6, n_computations=8)
+    serial = trace_from_hlo(text, MESH, label="t", shards=1)
+    sharded = trace_from_hlo(text, MESH, label="t", shards=3,
+                             shard_workers=0)
+    assert sharded.store.identical(serial.store)
+    assert dataclasses.asdict(sharded.op_stats) == \
+           dataclasses.asdict(serial.op_stats)
+    assert sharded.by_kind_and_link() == serial.by_kind_and_link()
+    assert sharded.total_est_time_s() == serial.total_est_time_s()
+    from repro.core.report import to_json
+    assert to_json(sharded) == to_json(serial)
+
+
+def test_trace_from_hlo_sharded_pool():
+    """The real process-pool path (fork or spawn) matches too."""
+    text = synthetic_hlo(n_sites=300, seed=7, n_computations=6)
+    serial = trace_from_hlo(text, MESH, shards=1)
+    pooled = trace_from_hlo(text, MESH, shards=2)
+    assert pooled.store.identical(serial.store)
+
+
+def test_session_ingest_cli_shards(tmp_path, capsys):
+    from repro.core.session import TraceSession, _main
+    p = tmp_path / "big.hlo"
+    p.write_text(synthetic_hlo(n_sites=150, seed=8, n_computations=4))
+    out = str(tmp_path / "sharded.json")
+    assert _main(["ingest", out, str(p), "--mesh", "2,4",
+                  "--axes", "data,model", "--shards", "2"]) == 0
+    assert "ingested 1 traces" in capsys.readouterr().out
+    loaded = TraceSession.load(out)
+    ref = trace_from_hlo(p.read_text(), MESH, shards=1)
+    assert loaded.get("big").by_kind_and_link() == ref.by_kind_and_link()
