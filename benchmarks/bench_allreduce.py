@@ -12,8 +12,10 @@ import json
 from _util import run_worker
 
 WORKER = """
-import json, time
-import jax, jax.numpy as jnp
+import json
+import time
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import MeshSpec, trace_from_hlo
 from repro.core.costmodel import allreduce_time

@@ -15,7 +15,8 @@ from _util import run_worker
 
 WORKER = """
 import json
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import MeshSpec, trace_from_hlo, detect
 

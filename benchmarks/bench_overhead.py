@@ -48,8 +48,10 @@ import time
 from _util import REPO, run_worker
 
 WORKER = """
-import json, time
-import jax, jax.numpy as jnp
+import json
+import time
+import jax
+import jax.numpy as jnp
 from repro.configs import ARCHS, smoke_config
 from repro.core import MeshSpec, trace_from_hlo
 from repro.core.report import to_json

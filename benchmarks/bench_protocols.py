@@ -13,8 +13,11 @@ import json
 from _util import run_worker
 
 WORKER = """
-import functools, json, time
-import jax, jax.numpy as jnp
+import functools
+import json
+import time
+import jax
+import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import MeshSpec, trace_from_hlo

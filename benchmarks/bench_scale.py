@@ -13,7 +13,8 @@ from _util import run_worker
 
 WORKER_TMPL = """
 import json
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.configs import ARCHS, smoke_config
 from repro.core import MeshSpec, trace_from_hlo
 from repro.distributed import sharding as sh

@@ -1,0 +1,68 @@
+"""Static collective lint walkthrough: catch comm bugs before any run.
+
+    PYTHONPATH=src python examples/lint_collectives.py
+
+Three passes of the `commcheck` static analyzer — no device, no jax:
+
+  1. a clean synthetic trace and the committed `examples/hlo/` dumps
+     (zero findings — the CI gate relies on this),
+  2. a trace with ground-truth bugs spliced in by `synth.inject_comm_bugs`
+     (every injected class must be flagged, ranked by bytes at risk),
+  3. a sharding plan linted pre-trace via `lint_pspecs` against the mesh.
+
+The same analysis drives `python -m repro.core.session lint` and the
+findings section of every JSON/HTML report.
+"""
+import os
+
+from repro.core import commcheck, synth
+from repro.core.hlo_parser import parse_hlo_store
+from repro.core.events import Trace
+from repro.core.topology import MeshSpec
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def show(title, findings):
+    print(f"\n== {title}: {len(findings)} finding(s)")
+    for f in findings:
+        where = f" @ {f.site}" if f.site else ""
+        print(f"  [{f.severity}] {f.detector}{where}"
+              f"  ({f.wasted_bytes/1e6:.2f} MB at risk)")
+
+
+def main():
+    # 1. clean sources come back empty
+    clean = synth.synthetic_trace("clean", MESH, n_sites=400, seed=0)
+    show("clean synthetic trace", commcheck.check_trace(clean, MESH))
+    hlo_dir = os.path.join(os.path.dirname(__file__), "hlo")
+    for fn in sorted(os.listdir(hlo_dir)):
+        with open(os.path.join(hlo_dir, fn)) as f:
+            store, stats = parse_hlo_store(f.read(), MESH.num_devices)
+        tr = Trace.from_store(fn, MESH.shape, MESH.axes, MESH.num_devices,
+                              store, op_stats=stats)
+        show(f"examples/hlo/{fn}", commcheck.check_trace(tr, MESH))
+
+    # 2. injected bugs: every class flagged, ground truth in `labels`
+    buggy, labels = synth.inject_comm_bugs(MESH, n_sites=64, seed=0)
+    findings = commcheck.check_trace(buggy, MESH)
+    show("trace with injected bugs", findings)
+    found = {f.detector for f in findings}
+    assert set(labels.values()) <= found, (labels, found)
+    print(f"   all {len(labels)} injected bug classes detected")
+
+    # 3. pre-trace sharding lint (duck-typed specs, no jax import)
+    sizes = {"data": 2, "model": 4}
+    class PartitionSpec(tuple):        # stand-in for jax's, same shape
+        pass
+    plan = {
+        "w1": PartitionSpec(("data", "model")),
+        "w2": PartitionSpec(("model", "model")),      # axis used twice
+        "w3": PartitionSpec(("expert", None)),        # axis not in mesh
+    }
+    shapes = {"w1": (128, 512), "w2": (64, 64), "w3": (32, 16)}
+    show("sharding plan", commcheck.lint_pspecs(plan, sizes, shapes=shapes))
+
+
+if __name__ == "__main__":
+    main()

@@ -18,7 +18,6 @@ import jax
 from repro.core import MeshSpec
 from repro.core.report import semantic_table, summary, to_html, top_contenders_table
 from repro.launch.dryrun import lower_cell
-from repro.core import trace_from_hlo
 
 
 def main():

@@ -7,8 +7,8 @@ a `ShapeSpec`.  A (config, shape) pair fully determines a compiled step
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
-from typing import Optional, Tuple
+from dataclasses import dataclass
+from typing import Tuple
 
 
 @dataclass(frozen=True)

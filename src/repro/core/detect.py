@@ -20,16 +20,49 @@ import numpy as np
 from repro.core.events import Trace
 from repro.core.topology import Hardware, V5E
 
+# severity -> rank; lower sorts first.  Shared by the dynamic detectors
+# below and the static analyzer (commcheck) — one ordering, one schema.
+SEVERITY_RANK: Dict[str, int] = {"critical": 0, "warn": 1, "info": 2}
+
 
 @dataclass
 class Finding:
+    """One diagnostic, shared between the dynamic detectors and the
+    static analyzer (`commcheck`).
+
+    `detector` doubles as the stable finding code (`session lint --json`
+    / `session detect --json` key consumers match on), `site` anchors the
+    finding to an op / channel / spec path, and `wasted_bytes` /
+    `time_at_risk_s` carry the cost-model ranking weight.
+    """
+
     detector: str
     severity: str          # info | warn | critical
     message: str
     wasted_bytes: float = 0.0
+    site: str = ""
+    time_at_risk_s: float = 0.0
 
     def __str__(self):
         return f"[{self.severity}] {self.detector}: {self.message}"
+
+    def to_dict(self) -> Dict[str, object]:
+        """The stable JSON schema (identical for `lint` and `detect`)."""
+        return {
+            "analyzer": self.detector,
+            "severity": self.severity,
+            "site": self.site,
+            "message": self.message,
+            "wasted_bytes": float(self.wasted_bytes),
+            "time_at_risk_s": float(self.time_at_risk_s),
+        }
+
+
+def rank_findings(findings: List[Finding]) -> List[Finding]:
+    """Severity-major, wire-bytes-at-risk-minor ordering (stable)."""
+    return sorted(findings,
+                  key=lambda f: (SEVERITY_RANK.get(f.severity, 99),
+                                 -f.wasted_bytes))
 
 
 def detect_redundant_gathers(trace: Trace) -> List[Finding]:
@@ -64,7 +97,7 @@ def detect_redundant_gathers(trace: Trace) -> List[Finding]:
             f"(scope '{s.scope.value(last) or '-'}', "
             f"comp '{s.computation.value(last)}') — candidates for CSE "
             f"or re-materialization of the gathered value",
-            wasted_bytes=wasted))
+            wasted_bytes=wasted, site=s.scope.value(last)))
     return out
 
 
@@ -95,7 +128,8 @@ def detect_axis_detours(trace: Trace, expected: Dict[str, str],
                 f"({nbytes/1e6:.1f} MB) spans "
                 f"axes {axes}, expected only '{want}' — check the "
                 f"PartitionSpec feeding scope '{s.scope.value(i) or '-'}'",
-                wasted_bytes=nbytes * int(s.multiplicity[i])))
+                wasted_bytes=nbytes * int(s.multiplicity[i]),
+                site=s.scope.value(i)))
     return out
 
 
@@ -114,7 +148,8 @@ def detect_eager_floods(trace: Trace, hw: Hardware = V5E,
             "eager_flood", "info",
             f"{n} latency-bound collectives/step (< {hw.rndv_threshold/1024:.0f} KiB "
             f"payload/shard), ~{lat*1e6:.0f} us serialized latency — consider "
-            f"fusing/batching small collectives or increasing scan body size")]
+            f"fusing/batching small collectives or increasing scan body size",
+            time_at_risk_s=lat)]
     return []
 
 
@@ -148,6 +183,7 @@ def detect_cross_pod_bulk(trace: Trace) -> List[Finding]:
 
 def run_all(trace: Trace, expected_axes: Dict[str, str] | None = None,
             hw: Hardware = V5E) -> List[Finding]:
+    """All detectors, ranked critical > warn > info, bytes-at-risk within."""
     findings = []
     findings += detect_redundant_gathers(trace)
     if expected_axes:
@@ -155,4 +191,4 @@ def run_all(trace: Trace, expected_axes: Dict[str, str] | None = None,
     findings += detect_eager_floods(trace, hw)
     findings += detect_layout_thrash(trace)
     findings += detect_cross_pod_bulk(trace)
-    return findings
+    return rank_findings(findings)

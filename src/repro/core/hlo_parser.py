@@ -225,7 +225,12 @@ def _parse_replica_groups(line: str, num_devices: int) -> List[List[int]]:
         g, s = int(m.group(1)), int(m.group(2))
         dims = [int(x) for x in m.group(3).split(",")]
         perm = [int(x) for x in m.group(4).split(",")] if m.group(4) else None
-        return resolve_iota_groups(g, s, dims, perm)
+        try:
+            return resolve_iota_groups(g, s, dims, perm)
+        except ValueError:
+            # malformed iota attr (bad dims product / transpose perm):
+            # degrade to a full-range group rather than abort the ingest
+            return [list(range(num_devices))]
     m = _EXPLICIT_RG_RE.search(line)
     if m:
         body = m.group(1)
@@ -706,7 +711,13 @@ def parse_hlo_store(text: str, num_devices: int, shard_ctx: Optional[Dict] = Non
                     dims = [int(x) for x in im.group(3).split(",")]
                     perm = [int(x) for x in im.group(4).split(",")] \
                         if im.group(4) else None
-                    groups = resolve_iota_groups(g, s, dims, perm)
+                    try:
+                        groups = resolve_iota_groups(g, s, dims, perm)
+                    except ValueError:
+                        # malformed iota attr: full-range fallback, same
+                        # as the reference (events-path) parser
+                        groups = [list(range(num_devices))]
+                        s = num_devices
                     gsz = max(len(gg) for gg in groups) if groups else 1
                     vkey = tuple(tuple(gg) for gg in groups)
                     gc = rg_value_idx.get(vkey)

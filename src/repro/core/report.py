@@ -30,9 +30,31 @@ from typing import IO, Iterator, List, Optional
 
 import numpy as np
 
+from repro.core import commcheck
 from repro.core.diff import KEY_FNS, _norm_by, diff_n
 from repro.core.events import Trace
 from repro.core.topology import MeshSpec, comm_matrix, reduce_matrix
+
+# comm-matrix guard: above this per-axis device count the O(n^2) cell grid
+# is replaced by a top-K pair summary (the 256+-device renderer fall-over)
+MATRIX_MAX_DIM = 64
+MATRIX_TOP_K = 32
+
+
+def trace_findings(trace: Trace):
+    """Static-analysis findings for a trace, cached on the trace object.
+
+    Both render engines (and both of `to_json`/`to_html`) share one
+    commcheck pass per store: the cache key is the store identity, so a
+    mutated/invalidated trace re-analyzes while repeat renders are free.
+    """
+    store = trace.store
+    cached = getattr(trace, "_report_findings", None)
+    if cached is not None and cached[0] is store:
+        return cached[1]
+    findings = commcheck.check_trace(trace)
+    trace._report_findings = (store, findings)
+    return findings
 
 
 # --------------------------------------------------------------------------
@@ -235,7 +257,8 @@ def iter_json(trace: Trace, chunk_sites: int = 8192) -> Iterator[str]:
             ("mesh_axes", list(trace.mesh_axes)),
             ("hlo_flops", trace.hlo_flops),
             ("hlo_bytes", trace.hlo_bytes),
-            ("per_device_memory_bytes", trace.per_device_memory_bytes)))
+            ("per_device_memory_bytes", trace.per_device_memory_bytes),
+            ("findings", [f.to_dict() for f in trace_findings(trace)])))
     if s.n == 0:
         yield head + ',\n "events": []\n}'
         return
@@ -279,6 +302,7 @@ def to_json(trace: Trace, engine: str = "columnar") -> str:
             "hlo_flops": trace.hlo_flops,
             "hlo_bytes": trace.hlo_bytes,
             "per_device_memory_bytes": trace.per_device_memory_bytes,
+            "findings": [f.to_dict() for f in trace_findings(trace)],
             "events": [{
                 "name": e.name, "kind": e.kind, "bytes": e.operand_bytes,
                 "mult": e.multiplicity, "link": e.link_class,
@@ -316,6 +340,27 @@ def iter_html(trace: Trace, mesh: MeshSpec,
     yield f"<h1>trace: {html_mod.escape(trace.label)}</h1>"
     yield "<pre>" + html_mod.escape(summary(trace)) + "</pre>"
 
+    # static-analysis findings (shared between engines; one pass per store)
+    findings = trace_findings(trace)
+    yield "<h2>commcheck findings (static analysis)</h2>"
+    if not findings:
+        yield "<pre>no findings — collective structure checks clean</pre>"
+    else:
+        rows = ["<table><tr><th>severity</th><th>code</th><th>site</th>"
+                "<th>MB at risk</th><th class='l'>message</th></tr>"]
+        for f in findings[:50]:
+            rows.append(
+                f"<tr><td>{html_mod.escape(f.severity)}</td>"
+                f"<td class='l'>{html_mod.escape(f.detector)}</td>"
+                f"<td class='l'>{html_mod.escape(f.site)}</td>"
+                f"<td>{f.wasted_bytes/1e6:.2f}</td>"
+                f"<td class='l'>{html_mod.escape(f.message)}</td></tr>")
+        if len(findings) > 50:
+            rows.append(f"<tr><td colspan='5' class='l'>... "
+                        f"({len(findings) - 50} more)</td></tr>")
+        rows.append("</table>")
+        yield "".join(rows)
+
     # top contenders
     yield "<h2>top contenders (kind x link) — Table II analogue</h2>"
     yield "<pre>" + html_mod.escape(
@@ -330,6 +375,29 @@ def iter_html(trace: Trace, mesh: MeshSpec,
         red = reduce_matrix(mat, mesh, axis)
         peak = red.max() or 1.0
         yield f"<h2>comm matrix over axis '{axis}' (GB)</h2>"
+        if red.shape[0] > MATRIX_MAX_DIM:
+            # big-mesh guard: n^2 <td> cells fall over past ~256 devices —
+            # summarize the heaviest pairs instead of painting the grid
+            flat = red.ravel()
+            k = min(MATRIX_TOP_K, int((flat > 0).sum()))
+            top = np.argsort(-flat, kind="stable")[:k]
+            rows = [f"<p>{red.shape[0]}x{red.shape[1]} matrix "
+                    f"(&gt; {MATRIX_MAX_DIM} groups) — top {k} pairs of "
+                    f"{int((flat > 0).sum())} nonzero, "
+                    f"{flat.sum()/1e9:.3f} GB total</p>",
+                    "<table><tr><th>src</th><th>dst</th><th>GB</th>"
+                    "<th class='l'>share</th></tr>"]
+            for idx in top.tolist():
+                i, j = divmod(idx, red.shape[1])
+                bar = int(120 * flat[idx] / peak)
+                rows.append(
+                    f"<tr><td>{i}</td><td>{j}</td>"
+                    f"<td>{flat[idx]/1e9:.3f}</td>"
+                    f"<td class='l'><span class='bar' "
+                    f"style='width:{bar}px'></span></td></tr>")
+            rows.append("</table>")
+            yield "".join(rows)
+            continue
         rows = ["<table class='hm'>"]
         for i in range(red.shape[0]):
             cells = []

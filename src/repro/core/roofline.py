@@ -10,7 +10,7 @@ does not report it, which is exactly the gap the paper's tool fills.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Optional
 
 from repro.core.events import Trace

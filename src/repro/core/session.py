@@ -24,6 +24,18 @@ CLI:
     python -m repro.core.session report PATH [LABEL] [--format json|html] \\
                                         [--out FILE] [--stream] \\
                                         [--chunk-sites N]
+    python -m repro.core.session lint  PATH [PATH ...] [--mesh 2,4] \\
+                                        [--axes data,model] [--json] \\
+                                        [--fail-on critical|warn|info|never]
+    python -m repro.core.session detect PATH [LABEL] [--json] \\
+                                        [--fail-on critical|warn|info|never]
+
+`lint` runs the static analyzer (`commcheck`) over saved sessions
+(.json/.npz) or raw HLO text files (ingested with --mesh/--axes);
+`detect` runs the dynamic detectors over a saved session.  Both emit the
+same stable finding schema under --json and exit 1 when any finding
+reaches the --fail-on severity (default: critical for lint, never for
+detect), 2 on input errors.
 """
 from __future__ import annotations
 
@@ -388,6 +400,35 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                    help="emit a machine-readable JSON diff instead of the "
                         "rendered table")
 
+    p = sub.add_parser("lint", help="static collective-correctness analysis "
+                                    "(commcheck) over sessions or HLO dumps")
+    p.add_argument("paths", nargs="+",
+                   help="saved sessions (.json/.npz) or HLO text files")
+    p.add_argument("--mesh", default="2,4",
+                   help="mesh shape for HLO inputs, comma-separated")
+    p.add_argument("--axes", default="data,model",
+                   help="mesh axis names for HLO inputs, comma-separated")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the stable machine schema (same as "
+                        "`detect --json`) instead of text")
+    p.add_argument("--fail-on", choices=("critical", "warn", "info", "never"),
+                   default="critical",
+                   help="exit 1 when any finding reaches this severity "
+                        "(default: critical)")
+
+    p = sub.add_parser("detect", help="dynamic performance detectors over "
+                                      "a saved session")
+    p.add_argument("path")
+    p.add_argument("label", nargs="?", default=None,
+                   help="trace label (default: all traces)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the stable machine schema (same as "
+                        "`lint --json`) instead of text")
+    p.add_argument("--fail-on", choices=("critical", "warn", "info", "never"),
+                   default="never",
+                   help="exit 1 when any finding reaches this severity "
+                        "(default: never — detectors are advisory)")
+
     p = sub.add_parser("report", help="render one trace of a session as "
                                       "JSON or a self-contained HTML page")
     p.add_argument("path")
@@ -436,6 +477,38 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         _print_totals(sess)
         return 0
 
+    if args.cmd == "lint":
+        from repro.core import commcheck
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = tuple(args.axes.split(","))
+        if len(shape) != len(axes):
+            print("error: --mesh and --axes must have the same rank",
+                  file=sys.stderr)
+            return 2
+        mesh = MeshSpec(shape, axes)
+        results = []
+        for path in args.paths:
+            try:
+                if path.endswith((".json", ".npz")):
+                    for t in TraceSession.load(path):
+                        results.append((path, t.label,
+                                        commcheck.check_trace(t)))
+                else:
+                    from repro.core.tracer import trace_from_hlo
+                    with open(path) as f:
+                        text = f.read()
+                    label = os.path.splitext(os.path.basename(path))[0]
+                    tr = trace_from_hlo(text, mesh, label=label)
+                    results.append((path, label,
+                                    commcheck.check_trace(tr, mesh)))
+            except FileNotFoundError:
+                print(f"error: no such file: {path}", file=sys.stderr)
+                return 2
+            except (KeyError, ValueError, json.JSONDecodeError) as e:
+                print(f"error: cannot lint {path} ({e!r})", file=sys.stderr)
+                return 2
+        return _emit_findings(results, args.as_json, args.fail_on)
+
     try:
         sess = TraceSession.load(args.path)
     except FileNotFoundError:
@@ -458,6 +531,16 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         except KeyError as e:
             print(f"error: {e.args[0]}", file=sys.stderr)
             return 2
+    elif args.cmd == "detect":
+        from repro.core import detect as detect_mod
+        try:
+            traces = [sess.get(args.label)] if args.label else list(sess)
+        except KeyError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            return 2
+        results = [(args.path, t.label, detect_mod.run_all(t))
+                   for t in traces]
+        return _emit_findings(results, args.as_json, args.fail_on)
     elif args.cmd == "report":
         # resolve the label before touching the output path, so a typo'd
         # label can't truncate a previous report
@@ -486,6 +569,31 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"wrote {args.format} report -> {args.out} "
                   f"({os.path.getsize(args.out)//1024} KB)")
     return 0
+
+
+def _emit_findings(results, as_json: bool, fail_on: str) -> int:
+    """Shared `lint`/`detect` output: one stable schema, one exit policy.
+
+    `results` is a list of (source path, trace label, findings).  Returns
+    1 when any finding reaches the `fail_on` severity, else 0.
+    """
+    from repro.core.detect import SEVERITY_RANK
+    if as_json:
+        print(json.dumps([
+            {"source": src, "trace": lbl,
+             "findings": [f.to_dict() for f in fs]}
+            for src, lbl, fs in results], indent=1))
+    else:
+        for src, lbl, fs in results:
+            print(f"{src} :: {lbl}: {len(fs)} finding(s)")
+            for f in fs:
+                where = f" @ {f.site}" if f.site else ""
+                print(f"  [{f.severity}] {f.detector}{where}: {f.message}")
+    if fail_on == "never":
+        return 0
+    worst = min((SEVERITY_RANK.get(f.severity, 99)
+                 for _src, _lbl, fs in results for f in fs), default=99)
+    return 1 if worst <= SEVERITY_RANK[fail_on] else 0
 
 
 def _print_totals(sess: TraceSession) -> None:

@@ -178,6 +178,7 @@ class TraceStore:
         self.axes_tables = axes_tables
         self.axes_code = np.asarray(axes_code, dtype=np.int32)
         self._edges: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
+        self._gexp: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = None
         self._rg_rows: Optional[List[List[List[int]]]] = None
         self._stp_rows: Optional[List] = None
         self._axes_rows: Optional[List[Tuple[str, ...]]] = None
@@ -567,6 +568,55 @@ class TraceStore:
         if self.n == 0:
             return 0.0
         return float(np.add.accumulate(self.est_time_s * self.weights)[-1])
+
+    # ---- replica-group expansion (static analysis support) -----------------
+
+    def expand_groups(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Flattened expansion of the *unique* replica-group tables.
+
+        Returns `(table_code, group_idx, device)` int64 arrays with one
+        entry per device slot of every unique table — the scatter-ready
+        form the static analyzer (`commcheck`) consumes.  Sized by the
+        deduplicated tables, not by rows: a 100k-site trace stamping the
+        same handful of `replica_groups` attrs expands each table once.
+        Cached on the store.
+        """
+        if self._gexp is None:
+            tcodes: List[np.ndarray] = []
+            gidxs: List[np.ndarray] = []
+            devs: List[np.ndarray] = []
+            for c, table in enumerate(self.group_tables):
+                for gi, group in enumerate(table):
+                    k = len(group)
+                    if not k:
+                        continue
+                    tcodes.append(np.full(k, c, dtype=np.int64))
+                    gidxs.append(np.full(k, gi, dtype=np.int64))
+                    devs.append(np.asarray(group, dtype=np.int64))
+            if tcodes:
+                self._gexp = (np.concatenate(tcodes), np.concatenate(gidxs),
+                              np.concatenate(devs))
+            else:
+                z = np.empty(0, dtype=np.int64)
+                self._gexp = (z, z.copy(), z.copy())
+        return self._gexp
+
+    def table_device_counts(self, num_devices: int) -> np.ndarray:
+        """`(n_tables, num_devices)` appearance counts per unique table.
+
+        Entry `[t, d]` is how many group slots of table `t` name device
+        `d` — 0 = not a participant, >1 = listed twice (overlap).  Devices
+        outside `[0, num_devices)` are dropped here; out-of-range lint
+        reads the raw expansion instead.
+        """
+        counts = np.zeros((len(self.group_tables), num_devices),
+                          dtype=np.int64)
+        if counts.size == 0:
+            return counts
+        tcode, _gi, dev = self.expand_groups()
+        ok = (dev >= 0) & (dev < num_devices)
+        np.add.at(counts, (tcode[ok], dev[ok]), 1)
+        return counts
 
     # ---- comm-matrix edges -------------------------------------------------
 

@@ -101,6 +101,91 @@ _PRIM_FOR = {
 
 
 # --------------------------------------------------------------------------
+# ground-truth buggy traces — precision/recall workloads for commcheck
+# --------------------------------------------------------------------------
+
+# bug name -> the commcheck finding code it must produce
+COMM_BUGS = {
+    "deadlock_order": "deadlock_order",
+    "group_coverage": "group_coverage",
+    "channel_collision": "channel_collision",
+    "shape_mismatch": "shape_mismatch",
+    "degenerate_group": "degenerate_group",
+    "sharding_mismatch": "group_mesh_mismatch",
+}
+
+
+def inject_comm_bugs(mesh: Optional[MeshSpec] = None, hw: Hardware = V5E,
+                     n_sites: int = 64, seed: int = 0,
+                     bugs: Sequence[str] = tuple(COMM_BUGS)):
+    """A clean synthetic trace with labeled communication bugs spliced in.
+
+    Returns `(trace, labels)` where `labels` maps each injected bug name
+    to the commcheck finding code it must trigger (see `COMM_BUGS`).  The
+    clean background sites come from `synthetic_trace` (unique channels,
+    full-coverage axis groups), so every finding the analyzer reports is
+    attributable to an injection — the ground truth for precision tests.
+    """
+    if mesh is None:
+        mesh = MeshSpec((2, 4), ("data", "model"))
+    nd = mesh.num_devices
+    devs = list(range(nd))
+    base = synthetic_trace("buggy", mesh, hw, n_sites=n_sites, seed=seed)
+    events = list(base.events)
+    ch = n_sites + 1000     # channel space disjoint from the clean sites
+
+    def mk(name, kind, groups, channel, nbytes=1 << 22, dtype="f32"):
+        return CollectiveEvent(
+            name=name, kind=kind, async_start=False,
+            operand_bytes=nbytes, result_bytes=nbytes, dtype=dtype,
+            replica_groups=groups, group_size=len(groups[0]),
+            num_groups=len(groups),
+            op_name=f"jit(train_step)/bug/{name}/{_PRIM_FOR.get(kind, 'psum')}",
+            computation="main", channel_id=channel)
+
+    injected = []
+    if "deadlock_order" in bugs:
+        # two matched all-reduces: half the devices see an extra instance
+        injected += [
+            mk("bug.deadlock.a", "all-reduce", [devs[:nd // 2]], ch),
+            mk("bug.deadlock.b", "all-reduce", [devs], ch),
+        ]
+    if "group_coverage" in bugs:
+        injected.append(
+            mk("bug.coverage", "all-reduce", [devs[:nd // 2]], ch + 1,
+               nbytes=1 << 21))
+    if "channel_collision" in bugs:
+        injected += [
+            mk("bug.collide.ar", "all-reduce", [devs], ch + 2,
+               nbytes=1 << 20),
+            mk("bug.collide.ag", "all-gather", [devs], ch + 2,
+               nbytes=1 << 20),
+        ]
+    if "shape_mismatch" in bugs:
+        injected += [
+            mk("bug.shape.a", "all-reduce", [devs], ch + 3, nbytes=1 << 19),
+            mk("bug.shape.b", "all-reduce", [devs], ch + 3, nbytes=1 << 18),
+        ]
+    if "sharding_mismatch" in bugs:
+        # ragged groups: the spec carved the mesh into uneven pieces
+        injected.append(
+            mk("bug.ragged", "all-reduce", [devs[:3], devs[3:]], ch + 4,
+               nbytes=1 << 17))
+    if "degenerate_group" in bugs:
+        injected.append(
+            mk("bug.degenerate", "all-reduce", [[d] for d in devs], ch + 5,
+               nbytes=1 << 16))
+
+    for ev in injected:
+        costmodel.annotate_event(ev, mesh, hw)
+    events += injected
+    attribution.attribute_all(events)
+    trace = Trace(label="buggy", mesh_shape=mesh.shape, mesh_axes=mesh.axes,
+                  num_devices=nd, events=events)
+    return trace, {b: COMM_BUGS[b] for b in bugs}
+
+
+# --------------------------------------------------------------------------
 # synthetic HLO text — ingest-pipeline workloads (parse -> annotate -> store)
 # --------------------------------------------------------------------------
 

@@ -136,7 +136,23 @@ def resolve_iota_groups(num_groups: int, group_size: int,
     `replica_groups=[G,S]<=[dims]` attr onto thousands of ops, so the
     numpy decode runs once per unique attr; only the (cheap) list
     materialization happens per call, keeping results mutation-safe.
+
+    Raises `ValueError` on a malformed attr (G*S != prod(dims), or a
+    transpose perm that is not a permutation of the dims) instead of an
+    opaque numpy reshape/transpose error — parser callers catch it and
+    fall back to a full-range group.
     """
+    dims = tuple(int(d) for d in reshape_dims)
+    n = int(np.prod(dims)) if dims else 0
+    if int(num_groups) * int(group_size) != n:
+        raise ValueError(
+            f"iota replica_groups [{num_groups},{group_size}]<={list(dims)}: "
+            f"{num_groups}*{group_size} != prod(dims) = {n}")
+    if transpose_perm is not None \
+            and sorted(int(p) for p in transpose_perm) != list(range(len(dims))):
+        raise ValueError(
+            f"iota replica_groups transpose T({list(transpose_perm)}) is not "
+            f"a permutation of {len(dims)} dims")
     rows = _resolve_iota_cached(
         int(num_groups), int(group_size), tuple(int(d) for d in reshape_dims),
         None if transpose_perm is None else tuple(int(p) for p in transpose_perm))

@@ -104,13 +104,11 @@ class TraceResult:
 def trace_compiled(compiled, mesh: MeshSpec, *, label: str = "step",
                    hw: Hardware = V5E) -> Trace:
     """Trace an already-compiled step (jax Compiled object)."""
-    t0 = time.perf_counter()
     text = compiled.as_text()
     ca = compiled.cost_analysis()
     ma = compiled.memory_analysis()
     tr = trace_from_hlo(text, mesh, label=label, hw=hw,
                         cost_analysis=ca, memory_analysis=ma)
-    tr_parse = time.perf_counter() - t0
     return tr
 
 

@@ -9,7 +9,7 @@ with identical iterator semantics.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import jax
 import numpy as np

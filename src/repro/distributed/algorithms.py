@@ -112,7 +112,6 @@ def allreduce_fn(algorithm: str, mesh, axis_name: str = "data",
                  keep_specs: P = None):
     """shard_map-wrapped allreduce over one mesh axis."""
     fn = ALGORITHMS[algorithm]
-    spec = keep_specs if keep_specs is not None else P()
 
     @functools.partial(shard_map, mesh=mesh, in_specs=P(axis_name),
                        out_specs=P(axis_name), check_rep=False)

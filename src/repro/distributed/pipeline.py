@@ -12,7 +12,6 @@ cost model prices both so the choice is quantitative.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax

@@ -190,6 +190,29 @@ def cache_pspecs(cfg, shape, mesh):
             for entry in specs_in]
 
 
+def lint_sharding(cfg, mesh, rules: Rules = TRAIN_RULES, shape=None):
+    """Static pre-trace lint of a model's sharding plan on a mesh.
+
+    Runs `commcheck.lint_pspecs` over the `param_pspecs` tree (with the
+    real parameter shapes from the meta tree, so divisibility and
+    unsharded-dominant-dim checks apply) and, when a `shape` is given,
+    over `batch_pspecs` too.  Returns findings ranked by severity then
+    tensor bytes at stake — catch a bad spec before compiling anything.
+    """
+    from repro.core import commcheck
+    from repro.core.detect import rank_findings
+
+    sizes = mesh_axis_sizes(mesh)
+    meta_tree = model_api.model_meta(cfg)
+    shapes = tree_map_meta(lambda _p, m: tuple(m.shape), meta_tree)
+    out = commcheck.lint_pspecs(param_pspecs(cfg, mesh, rules), sizes,
+                                shapes=shapes, prefix="params")
+    if shape is not None:
+        out += commcheck.lint_pspecs(batch_pspecs(cfg, shape, mesh), sizes,
+                                     prefix="batch")
+    return rank_findings(out)
+
+
 def serve_rules_for(cfg, mesh) -> Rules:
     """Replicate weights over DP axes only when they comfortably fit."""
     sizes = mesh_axis_sizes(mesh)

@@ -18,7 +18,6 @@ head_dim is padded to a multiple of 128 by the wrapper (h2o-danube: 120).
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -7,7 +7,6 @@ call sites compile the Mosaic kernels.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

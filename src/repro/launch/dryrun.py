@@ -15,7 +15,7 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, SHAPE_ORDER, get_config, shape_applicable
 from repro.core import MeshSpec, roofline, trace_from_hlo
-from repro.core.report import summary, to_html, to_json, top_contenders_table, semantic_table
+from repro.core.report import to_html, to_json, top_contenders_table, semantic_table
 from repro.core.roofline import decode_model_flops, train_model_flops
 from repro.distributed import sharding as sh
 from repro.distributed.autoshard import activation_sharding
@@ -37,7 +37,7 @@ def analytic_memory_bytes(cfg, shape, st, mesh, rules) -> Dict[str, float]:
     15% working-set slack.
     """
     import numpy as np
-    from repro.models.meta import tree_map_meta, is_meta
+    from repro.models.meta import is_meta
 
     sizes = sh.mesh_axis_sizes(mesh)
     meta_tree = model_api.model_meta(cfg)

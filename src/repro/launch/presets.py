@@ -5,7 +5,7 @@ optimizer moments.  Overridable from the CLI.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

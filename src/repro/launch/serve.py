@@ -13,7 +13,7 @@ from __future__ import annotations
 import argparse
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -122,7 +122,6 @@ def main():
             if server.slots[slot] is None and queue:
                 server.prefill_into_slot(slot, queue.pop(0))
         server.decode_round()
-        done = [r for r in reqs if r.done]
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.generated) for r in reqs)
     print(f"[serve] {len(reqs)} requests, {total_tokens} tokens "

@@ -5,8 +5,7 @@ ShapeDtypeStructs, `launch.train`/`launch.serve` execute them.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -18,12 +18,9 @@ import argparse
 import os
 import signal
 import sys
-import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro import checkpoint
 from repro.configs import get_config, smoke_config

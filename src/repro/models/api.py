@@ -6,7 +6,7 @@ so launch/, training/ and the tracer never branch on family themselves.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.models import encdec, transformer
 from repro.models import meta as meta_mod
-from repro.models.losses import fused_next_token_loss, lm_loss
+from repro.models.losses import fused_next_token_loss
 
 
 def n_image_patches(cfg, seq_len: int) -> int:

@@ -12,7 +12,7 @@ being permutation-invariant over keys.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

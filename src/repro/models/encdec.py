@@ -15,7 +15,6 @@ import jax.numpy as jnp
 from repro.distributed.autoshard import constrain_residual
 from repro.models import attention as attn_mod
 from repro.models import layers as L
-from repro.models.meta import ParamMeta
 from repro.models.transformer import stack_meta, _maybe_remat, layer_params
 
 

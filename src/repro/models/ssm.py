@@ -12,7 +12,6 @@ Decode carries (conv_state [B, d_conv-1, d_inner], ssm_state [B, d_inner, N]).
 from __future__ import annotations
 
 import math
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

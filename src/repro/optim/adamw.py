@@ -4,7 +4,7 @@ for the cross-pod reduction (see distributed.compression)."""
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

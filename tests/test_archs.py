@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, ARCH_ORDER, get_config, smoke_config
+from repro.configs import ARCH_ORDER, get_config, smoke_config
 from repro.models import api
 
 FAMILY_REPS = ["chatglm3-6b", "mixtral-8x22b", "falcon-mamba-7b",
@@ -19,7 +19,6 @@ def test_smoke_forward(arch):
     batch = api.demo_batch(cfg, 2, 32)
     logits, aux = api.forward(cfg, params, batch, attn_impl="naive")
     B = 2
-    S = 32 if cfg.family != "vlm" else 32
     assert logits.shape[0] == B and logits.shape[-1] == cfg.vocab_size
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     loss = api.loss_fn(cfg, params, batch)
@@ -87,7 +86,6 @@ def test_exact_configs_match_assignment(arch):
 
 def test_param_counts_in_published_range():
     """Total param counts should be near the published sizes."""
-    import math
     expect = {"llama3-405b": 405e9, "mixtral-8x22b": 141e9,
               "qwen3-moe-235b-a22b": 235e9, "chatglm3-6b": 6.2e9,
               "falcon-mamba-7b": 7.3e9, "gemma3-4b": 4.3e9,

@@ -1,5 +1,4 @@
 """Checkpoint store: roundtrip, atomicity, pruning, elastic restore."""
-import json
 import os
 
 import jax
@@ -88,7 +87,11 @@ def test_async_checkpointer(tmp_path):
 def test_elastic_restore_across_meshes(subproc):
     """Save sharded on a (2,4) mesh, restore onto (4,2) and (8,1) meshes."""
     out = subproc("""
-import jax, jax.numpy as jnp, numpy as np, tempfile, os
+import jax
+import jax.numpy as jnp
+import numpy as np
+import tempfile
+import os
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro import checkpoint
 

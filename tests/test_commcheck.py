@@ -1,0 +1,320 @@
+"""Static analyzer coverage: zero findings on clean traces, every injected
+bug class flagged with its expected code, severity ranking by bytes at
+risk, pspec lint, and the `session lint` CLI contract."""
+import json
+from pathlib import Path
+from types import SimpleNamespace
+
+import numpy as np
+import pytest
+
+from repro.core import commcheck, detect, report, synth
+from repro.core.events import CollectiveEvent, Trace
+from repro.core.hlo_parser import parse_hlo_store
+from repro.core.synth import inject_comm_bugs, synthetic_hlo, synthetic_trace
+from repro.core.topology import MeshSpec
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+EXAMPLES = sorted(Path(__file__).resolve().parents[1].glob("examples/hlo/*.txt"))
+
+
+def mk_event(**kw):
+    base = dict(name="ar", kind="all-reduce", async_start=False,
+                operand_bytes=1 << 22, result_bytes=1 << 22, dtype="f32",
+                replica_groups=[[d] for d in range(8)], group_size=1,
+                num_groups=8, op_name="", computation="main")
+    base.update(kw)
+    if base["replica_groups"]:
+        base.setdefault("group_size", len(base["replica_groups"][0]))
+        base.setdefault("num_groups", len(base["replica_groups"]))
+    return CollectiveEvent(**base)
+
+
+def mk_trace(events):
+    return Trace(label="t", mesh_shape=(2, 4), mesh_axes=("data", "model"),
+                 num_devices=8, events=events)
+
+
+# -- clean traces are clean -------------------------------------------------
+
+def test_clean_synth_trace_no_findings():
+    t = synthetic_trace("clean", MESH, n_sites=200, seed=3)
+    assert commcheck.check_trace(t, MESH) == []
+
+
+@pytest.mark.parametrize("n_comp", [1, 3])
+def test_clean_synth_hlo_no_findings(n_comp):
+    text = synthetic_hlo(n_sites=300, seed=5, n_computations=n_comp)
+    store, _stats = parse_hlo_store(text, MESH.num_devices)
+    t = Trace.from_store("hlo", MESH.shape, MESH.axes, MESH.num_devices, store)
+    assert commcheck.check_trace(t, MESH) == []
+
+
+@pytest.mark.parametrize("path", EXAMPLES, ids=lambda p: p.stem)
+def test_examples_lint_clean(path):
+    from repro.core.tracer import trace_from_hlo
+    t = trace_from_hlo(path.read_text(), MESH, label=path.stem)
+    assert commcheck.check_trace(t, MESH) == []
+
+
+# -- injected bugs: every class flagged, nothing else -----------------------
+
+def test_injected_bugs_all_flagged():
+    trace, labels = inject_comm_bugs(MESH, n_sites=64, seed=0)
+    findings = commcheck.check_trace(trace, MESH)
+    found = {f.detector for f in findings}
+    for bug, code in labels.items():
+        assert code in found, f"injected {bug} not flagged as {code}"
+    # precision: only codes attributable to an injection fire
+    assert found <= set(labels.values())
+
+
+@pytest.mark.parametrize("bug", sorted(synth.COMM_BUGS))
+def test_each_bug_flagged_in_isolation(bug):
+    trace, labels = inject_comm_bugs(MESH, n_sites=32, seed=1, bugs=(bug,))
+    found = {f.detector for f in commcheck.check_trace(trace, MESH)}
+    assert found == {labels[bug]}
+
+
+def test_deadlock_counts_and_severity():
+    trace, _ = inject_comm_bugs(MESH, n_sites=32, bugs=("deadlock_order",))
+    (f,) = commcheck.check_trace(trace, MESH)
+    assert f.severity == "critical"
+    assert f.wasted_bytes > 0
+    assert "block forever" in f.message
+
+
+# -- severity ranking (satellite e) -----------------------------------------
+
+def _assert_ranked(findings):
+    ranks = [detect.SEVERITY_RANK[f.severity] for f in findings]
+    assert ranks == sorted(ranks)
+    for a, b in zip(findings, findings[1:]):
+        if a.severity == b.severity:
+            assert a.wasted_bytes >= b.wasted_bytes
+
+
+def test_commcheck_output_ranked_critical_first():
+    trace, _ = inject_comm_bugs(MESH, n_sites=64, seed=0)
+    findings = commcheck.check_trace(trace, MESH)
+    sevs = {f.severity for f in findings}
+    assert {"critical", "warn", "info"} <= sevs
+    _assert_ranked(findings)
+    # critical deadlock (largest injected payload) outranks everything
+    assert findings[0].severity == "critical"
+    assert findings[-1].severity == "info"
+
+
+def test_run_all_output_ranked():
+    trace, _ = inject_comm_bugs(MESH, n_sites=64, seed=0)
+    _assert_ranked(detect.run_all(trace))
+
+
+# -- replica-group / permute families on crafted stores ---------------------
+
+def test_out_of_range_device_critical():
+    t = mk_trace([mk_event(replica_groups=[[0, 1, 2, 99]])])
+    findings = commcheck.check_trace(t)
+    codes = {f.detector: f.severity for f in findings}
+    # naming device 99 also leaves real devices uncovered — both fire
+    assert codes.get("device_out_of_range") == "critical"
+    assert codes.get("group_coverage") == "critical"
+
+
+def test_group_overlap_critical():
+    t = mk_trace([mk_event(replica_groups=[[0, 1, 2, 3], [3, 4, 5, 6]])])
+    findings = commcheck.check_trace(t)
+    assert findings[0].detector == "group_overlap"
+    assert findings[0].severity == "critical"
+
+
+def test_uniform_groups_divide_mesh_ok():
+    # [4,2]<=[8]-style tiling: size 4 divides the full 8-device product
+    t = mk_trace([mk_event(replica_groups=[[0, 1, 2, 3], [4, 5, 6, 7]])])
+    assert commcheck.check_trace(t) == []
+
+
+def test_permute_dup_target_critical_dup_source_warn():
+    dup_t = mk_trace([mk_event(
+        kind="collective-permute", name="cp",
+        source_target_pairs=[(0, 1), (2, 1), (3, 4)],
+        replica_groups=[list(range(8))])])
+    codes = {f.detector: f.severity for f in commcheck.check_trace(dup_t)}
+    assert codes.get("permute_dup_target") == "critical"
+    dup_s = mk_trace([mk_event(
+        kind="collective-permute", name="cp",
+        source_target_pairs=[(0, 1), (0, 2), (3, 4)],
+        replica_groups=[list(range(8))])])
+    codes = {f.detector: f.severity for f in commcheck.check_trace(dup_s)}
+    assert codes.get("permute_dup_source") == "warn"
+
+
+def test_permute_self_loop_info():
+    t = mk_trace([mk_event(
+        kind="collective-permute", name="cp",
+        source_target_pairs=[(0, 0), (1, 2)],
+        replica_groups=[list(range(8))])])
+    codes = {f.detector: f.severity for f in commcheck.check_trace(t)}
+    assert codes.get("permute_self_loop") == "info"
+
+
+def test_permute_oob_critical():
+    t = mk_trace([mk_event(
+        kind="collective-permute", name="cp",
+        source_target_pairs=[(0, 12)],
+        replica_groups=[list(range(8))])])
+    assert any(f.detector == "device_out_of_range" and f.severity == "critical"
+               for f in commcheck.check_trace(t))
+
+
+# -- store group-expansion plumbing -----------------------------------------
+
+def test_expand_groups_and_device_counts():
+    t = mk_trace([mk_event(replica_groups=[[0, 1], [2, 3]]),
+                  mk_event(name="ar2", replica_groups=[[0, 1, 2, 3],
+                                                       [3, 4, 5, 6]])])
+    store = t.store
+    tcode, gidx, dev = store.expand_groups()
+    assert len(tcode) == len(gidx) == len(dev) == 12
+    cnt = store.table_device_counts(8)
+    assert cnt.shape == (len(store.group_tables), 8)
+    # second table: device 3 appears in both groups
+    t2 = store.group_code[1]
+    assert cnt[t2, 3] == 2
+    assert cnt[t2, 7] == 0
+    # cached: same arrays back
+    assert store.expand_groups()[0] is tcode
+
+
+# -- pspec lint (duck-typed, jax-free) --------------------------------------
+
+class FakeSpec(tuple):
+    """PartitionSpec stand-in for jax-free tests."""
+
+
+def _leaf(x):
+    return isinstance(x, FakeSpec)
+
+
+SIZES = {"data": 2, "model": 4}
+
+
+def _codes(findings):
+    return {f.detector for f in findings}
+
+
+def test_pspec_dup_axis():
+    specs = {"w": FakeSpec(("model", "model"))}
+    fs = commcheck.lint_pspecs(specs, SIZES, is_leaf=_leaf)
+    assert _codes(fs) == {"pspec_dup_axis"}
+    assert fs[0].severity == "critical"
+    assert fs[0].site == "w"
+
+
+def test_pspec_unknown_axis():
+    specs = {"w": FakeSpec(("expert", None))}
+    fs = commcheck.lint_pspecs(specs, SIZES, is_leaf=_leaf)
+    assert _codes(fs) == {"pspec_unknown_axis"}
+
+
+def test_pspec_indivisible():
+    specs = {"w": FakeSpec((None, "model"))}
+    fs = commcheck.lint_pspecs(specs, SIZES, shapes={"w": (8, 6)},
+                               is_leaf=_leaf)
+    assert _codes(fs) == {"pspec_indivisible"}
+    assert fs[0].severity == "warn"
+
+
+def test_pspec_unsharded_dominant_dim():
+    specs = {"emb": FakeSpec((None, None))}
+    fs = commcheck.lint_pspecs(specs, SIZES, shapes={"emb": (8192, 64)},
+                               is_leaf=_leaf)
+    assert _codes(fs) == {"pspec_unsharded_dim"}
+    assert fs[0].wasted_bytes == 8192 * 64 * 4.0
+
+
+def test_pspec_clean_tree_silent():
+    specs = {"a": {"w": FakeSpec(("data", "model"))},
+             "b": [FakeSpec((None, "model"))]}
+    shapes = {"a": {"w": (4, 8)}, "b": [(16, 8)]}
+    assert commcheck.lint_pspecs(specs, SIZES, shapes=shapes,
+                                 is_leaf=_leaf) == []
+
+
+def test_lint_sharding_real_config_no_criticals():
+    from repro.configs import get_config
+    from repro.distributed.sharding import lint_sharding
+    mesh = SimpleNamespace(axis_names=("data", "model"),
+                           devices=np.empty((2, 4), object))
+    fs = lint_sharding(get_config("hymba-1.5b"), mesh)
+    assert all(f.severity != "critical" for f in fs)
+
+
+# -- report integration -----------------------------------------------------
+
+def test_report_findings_key_and_engine_identity():
+    trace, labels = inject_comm_bugs(MESH, n_sites=48, seed=2)
+    doc_cols = json.loads(report.to_json(trace, engine="columnar"))
+    doc_rows = json.loads(report.to_json(trace, engine="rows"))
+    assert doc_cols == doc_rows
+    codes = {f["analyzer"] for f in doc_cols["findings"]}
+    assert set(labels.values()) <= codes
+    clean = synthetic_trace("clean", MESH, n_sites=64, seed=7)
+    assert json.loads(report.to_json(clean))["findings"] == []
+
+
+def test_report_findings_computed_once_per_store():
+    trace, _ = inject_comm_bugs(MESH, n_sites=48, seed=2)
+    f1 = report.trace_findings(trace)
+    f2 = report.trace_findings(trace)
+    assert f1 is f2
+
+
+def test_html_matrix_guard_above_threshold():
+    big = MeshSpec((128, 2), ("data", "model"))
+    t = synthetic_trace("big", big, n_sites=64, seed=0)
+    html = report.to_html(t, big)
+    assert f"&gt; {report.MATRIX_MAX_DIM} groups" in html
+    assert "<th>src</th><th>dst</th>" in html
+    # small mesh still paints the full grid
+    small = synthetic_trace("small", MESH, n_sites=32, seed=0)
+    assert "groups) — top" not in report.to_html(small, MESH)
+
+
+# -- CLI contract -----------------------------------------------------------
+
+def test_cli_lint_clean_and_buggy(tmp_path, capsys):
+    from repro.core.session import _main
+    clean = tmp_path / "clean.txt"
+    clean.write_text(synthetic_hlo(n_sites=120, seed=9))
+    assert _main(["lint", str(clean), "--mesh", "2,4",
+                  "--axes", "data,model"]) == 0
+    capsys.readouterr()
+    assert _main(["lint", str(tmp_path / "nope.txt"), "--mesh", "2,4",
+                  "--axes", "data,model"]) == 2
+    capsys.readouterr()
+
+
+def test_cli_lint_json_schema_matches_detect(tmp_path, capsys):
+    from repro.core.session import TraceSession
+    from repro.core.session import _main
+    trace, _ = inject_comm_bugs(MESH, n_sites=48, seed=4)
+    sess = TraceSession("bugs", [trace])
+    path = sess.save(str(tmp_path / "bugs.json"))
+
+    assert _main(["lint", path, "--json", "--fail-on", "never"]) == 0
+    lint_doc = json.loads(capsys.readouterr().out)
+    assert _main(["lint", path, "--json"]) == 1          # criticals present
+    capsys.readouterr()
+
+    assert _main(["detect", path, "--json"]) == 0
+    detect_doc = json.loads(capsys.readouterr().out)
+
+    keys = {"analyzer", "severity", "site", "message",
+            "wasted_bytes", "time_at_risk_s"}
+    assert lint_doc and lint_doc[0]["findings"]
+    for doc in (lint_doc, detect_doc):
+        for entry in doc:
+            assert set(entry) == {"source", "trace", "findings"}
+            for f in entry["findings"]:
+                assert set(f) == keys

@@ -13,7 +13,6 @@ import pytest
 
 from _hypothesis_compat import given, settings, strategies as st
 from repro.core import attribution, costmodel, hlo_parser
-from repro.core.events import Trace
 from repro.core.store import TraceStore
 from repro.core.synth import synthetic_hlo, synthetic_trace
 from repro.core.topology import MeshSpec, V5E, resolve_iota_groups
@@ -152,6 +151,58 @@ def test_resolve_iota_groups_memoized():
     assert resolve_iota_groups(2, 4, [8], None)[0][0] == 0
     from repro.core.topology import _resolve_iota_cached
     assert _resolve_iota_cached.cache_info().hits >= 2
+
+
+def test_resolve_iota_transposed_expansions_pinned():
+    # [4,2]<=[2,4]T(1,0): column-major walk of the 2x4 grid -> stride-4 pairs
+    assert resolve_iota_groups(4, 2, [2, 4], (1, 0)) == \
+        [[0, 4], [1, 5], [2, 6], [3, 7]]
+    # [2,4]<=[4,2]T(1,0): stride-2 interleave
+    assert resolve_iota_groups(2, 4, [4, 2], (1, 0)) == \
+        [[0, 2, 4, 6], [1, 3, 5, 7]]
+    # identity transpose matches the plain form
+    assert resolve_iota_groups(2, 4, [2, 4], (0, 1)) == \
+        resolve_iota_groups(2, 4, [8], None)
+
+
+def test_resolve_iota_malformed_raises():
+    with pytest.raises(ValueError, match="prod"):
+        resolve_iota_groups(3, 3, [8], None)          # 3*3 != 8
+    with pytest.raises(ValueError, match="transpose"):
+        resolve_iota_groups(4, 2, [2, 4], (0, 2))     # bad permutation
+
+
+def _one_site_hlo(rg_attr: str) -> str:
+    return (
+        "HloModule malformed\n\n"
+        "%add (a: f32[], b: f32[]) -> f32[] {\n"
+        "  %a = f32[] parameter(0)\n"
+        "  %b = f32[] parameter(1)\n"
+        "  ROOT %r = f32[] add(%a, %b)\n"
+        "}\n\n"
+        "ENTRY %main (x: f32[128,128]) -> f32[128,128] {\n"
+        "  %x = f32[128,128] parameter(0)\n"
+        f"  %all-reduce.1 = f32[128,128] all-reduce(%x), channel_id=1, "
+        f"{rg_attr}, to_apply=%add, "
+        "metadata={op_name=\"jit(f)/psum\"}\n"
+        "  ROOT %out = f32[128,128] add(%all-reduce.1, %x)\n"
+        "}\n")
+
+
+@pytest.mark.parametrize("rg_attr", [
+    "replica_groups=[3,3]<=[8]",              # count*size != prod(dims)
+    "replica_groups=[4,2]<=[2,4]T(0,2)",      # invalid transpose perm
+    "replica_groups={}",                      # empty form
+])
+def test_malformed_iota_falls_back_full_range(rg_attr):
+    """Both parser engines degrade malformed/empty replica_groups to the
+    single full-range group instead of crashing mid-module."""
+    text = _one_site_hlo(rg_attr)
+    events, _ = hlo_parser.parse_hlo(text, MESH.num_devices)
+    store, _ = hlo_parser.parse_hlo_store(text, MESH.num_devices)
+    full = [list(range(MESH.num_devices))]
+    assert [e.replica_groups for e in events] == [full]
+    assert store.replica_groups == [full]
 
 
 # -- store schema round-trip (v2) + v1 compat --------------------------------

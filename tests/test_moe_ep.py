@@ -1,11 +1,12 @@
 """Sort-based EP dispatch vs the einsum baseline (numerical equivalence
 with a no-drop capacity factor, on a real mesh)."""
-import pytest
 
 
 def test_sort_dispatch_matches_einsum(subproc):
     out = subproc("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.configs import ARCHS, smoke_config
 from repro.distributed.autoshard import activation_sharding

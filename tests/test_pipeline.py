@@ -12,7 +12,9 @@ def test_bubble_fraction():
 
 def test_pipeline_matches_sequential(subproc):
     out = subproc("""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.distributed.pipeline import pipeline_apply
 from repro.core import MeshSpec, trace_from_hlo
 

@@ -1,5 +1,4 @@
 """Serving-path correctness: prefill+decode == full forward, per family."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -6,7 +6,6 @@ dicts, so we exercise the exact production mesh shapes without 512 devices.
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import ARCH_ORDER, SHAPES, get_config, shape_applicable
 from repro.distributed import sharding as sh
@@ -130,8 +129,6 @@ def test_hsdp_rules_shard_intra_pod_only():
 
 
 def test_serve_rules_adaptive():
-    import jax
-    mesh_sizes_stub = type("M", (), {})
     # big model -> FSDP serving; small -> replicated over data
     class FakeMesh:
         axis_names = ("data", "model")

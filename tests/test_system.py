@@ -3,7 +3,6 @@ dry-run machinery at reduced scale, loss-path equivalence."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import ARCHS, SHAPES, smoke_config
 from repro.models import api
@@ -56,7 +55,8 @@ def test_traced_train_step_multi_device(subproc):
     attribution pipeline produces grad_sync + module semantics + sane
     roofline terms (the paper's core loop, end to end)."""
     out = subproc("""
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from repro.configs import ARCHS, smoke_config
 from repro.core import MeshSpec, roofline, trace_from_hlo
 from repro.core.report import top_contenders_table
@@ -133,7 +133,8 @@ def test_detectors_fire_on_misconfiguration(subproc):
     """Fig 7 analogue: a sharding misconfiguration produces axis-detour
     traffic visible to the detector suite."""
     out = subproc("""
-import jax, jax.numpy as jnp
+import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core import MeshSpec, trace_from_hlo
 from repro.core import detect

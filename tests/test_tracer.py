@@ -1,5 +1,4 @@
 """Unit + property tests for the tracer core (the paper's contribution)."""
-import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, strategies as st
 
