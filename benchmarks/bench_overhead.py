@@ -27,6 +27,11 @@ Also measures the analysis hot paths at the paper's experiment scale:
     2x speedup gate applies on boxes with >= 4 usable cores (parallel
     parse is CPU-bound; below that only the CI trajectory ratio gates).
     Persisted to BENCH_shard.json at the repo root.
+  * append-mode ingest — one multi-computation module split into chunks,
+    parsed and folded into a rolling store via `TraceStore.append` (the
+    watch daemon's streaming path) vs one batch parse, appended store
+    byte-identical required (>= 0.5x gate: chunking must stay within 2x
+    of batch).  Persisted to BENCH_append.json at the repo root.
   * session persistence — save + load round-trip of a 2-trace session,
     compressed-npz columnar arrays vs compact JSON, exact round-trip
     required (the ratio is the size-independent trajectory signal).
@@ -37,6 +42,7 @@ CI smoke entry points (no jax worker, smaller traces):
     python benchmarks/bench_overhead.py --ingest-only [--sites N]
     python benchmarks/bench_overhead.py --render-only [--sites N]
     python benchmarks/bench_overhead.py --shard-only [--sites N]
+    python benchmarks/bench_overhead.py --append-only [--sites N]
     python benchmarks/bench_overhead.py --persist-only [--sites N]
 """
 from __future__ import annotations
@@ -109,14 +115,16 @@ def _write_bench_payload(stem: str, n_sites: int, payload: dict,
                          json_path: str = None) -> None:
     """Persist a bench payload: the repo-root artifact tracks the perf
     trajectory across PRs, so only full-size runs may write it (smoke
-    sizes are not comparable and land in results/ instead)."""
+    sizes are not comparable and land in results/ instead).  Written
+    atomically — the watch-daemon smoke job reads these mid-run."""
+    from repro.core.persist import atomic_open
     if json_path is None:
         if n_sites >= 100_000:
             json_path = os.path.join(REPO, f"{stem}.json")
         else:
             os.makedirs(os.path.join(REPO, "results"), exist_ok=True)
             json_path = os.path.join(REPO, "results", f"{stem}_smoke.json")
-    with open(json_path, "w") as f:
+    with atomic_open(json_path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
 
@@ -377,6 +385,67 @@ def _shard_case(n_sites: int = 100_000, json_path: str = None):
     return rows, payload
 
 
+def _append_case(n_sites: int = 100_000, n_chunks: int = 16,
+                 json_path: str = None):
+    """Streaming append-mode ingest vs one batch parse.
+
+    One multi-computation module splits into `n_chunks` per-computation
+    chunks (the watch daemon's arrival order); each chunk parses and
+    folds into a rolling store via `TraceStore.append`.  The appended
+    store must be byte-identical (`TraceStore.identical`) to the batch
+    `parse_hlo_store` of the whole text — the live-profiling invariant.
+
+    Gate: >= 0.5x of the batch parse — amortized-doubling buffers and
+    cached interning keep the chunked path within 2x of batch despite
+    paying per-chunk parser overhead N times; a super-linear append
+    (re-copying columns per chunk) collapses this ratio.
+    """
+    from repro.core import hlo_parser
+    from repro.core.store import IncrementalRollup, TraceStore
+    from repro.core.synth import synthetic_hlo
+
+    mesh_devices = 8
+    text = synthetic_hlo(n_sites=n_sites, seed=0, n_computations=64)
+    chunks, ctx = hlo_parser.split_hlo_module(text, n_chunks)
+
+    t0 = time.perf_counter()
+    batch, _ = hlo_parser.parse_hlo_store(text, mesh_devices)
+    t_batch = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    acc = TraceStore.empty()
+    roll = IncrementalRollup("kind_link")
+    for c in chunks:
+        store, _ = hlo_parser.parse_hlo_store(c, mesh_devices,
+                                              shard_ctx=ctx)
+        acc.append(store)
+        roll.update(store)
+    t_append = time.perf_counter() - t0
+
+    identical = acc.identical(batch) and len(roll.labels) > 0
+    speedup = t_batch / max(t_append, 1e-9)
+    payload = {
+        "bench": "append_ingest",
+        "sites": acc.n,
+        "hlo_kb": len(text) // 1024,
+        "chunks": len(chunks),
+        "batch_s": round(t_batch, 4),
+        "append_s": round(t_append, 4),
+        "speedup": round(speedup, 2),
+        "target": 0.5,
+        "byte_identical": identical,
+    }
+    _write_bench_payload("BENCH_append", n_sites, payload, json_path)
+    rows = [
+        (f"overhead/append{n_sites//1000}k/batch_parse", t_batch * 1e6,
+         "baseline-cost"),
+        (f"overhead/append{n_sites//1000}k/chunked_append", t_append * 1e6,
+         f"speedup={speedup:.2f}x|target>=0.5x|chunks={len(chunks)}|"
+         f"byte_identical={identical}"),
+    ]
+    return rows, payload
+
+
 def _persist_case(n_sites: int = 100_000, json_path: str = None):
     """Session save/load round-trip: compressed npz vs compact JSON.
 
@@ -454,6 +523,8 @@ def run():
     rows += ingest_rows
     shard_rows, _spayload = _shard_case()       # 100k: writes BENCH_shard.json
     rows += shard_rows
+    append_rows, _apayload = _append_case()     # 100k: BENCH_append.json
+    rows += append_rows
     persist_rows, _ppayload = _persist_case()   # 100k: BENCH_persist.json
     rows += persist_rows
     out = run_worker(WORKER, devices=8)
@@ -475,14 +546,15 @@ if __name__ == "__main__":
     ap.add_argument("--ingest-only", action="store_true")
     ap.add_argument("--render-only", action="store_true")
     ap.add_argument("--shard-only", action="store_true")
+    ap.add_argument("--append-only", action="store_true")
     ap.add_argument("--persist-only", action="store_true")
     ap.add_argument("--sites", type=int,
                     default=int(os.environ.get("INGEST_SITES", 100_000)))
     args = ap.parse_args()
     if not (args.ingest_only or args.render_only or args.shard_only
-            or args.persist_only):
+            or args.append_only or args.persist_only):
         ap.error("pass --ingest-only / --render-only / --shard-only / "
-                 "--persist-only as a direct entry point")
+                 "--append-only / --persist-only as a direct entry point")
     cases = [
         # (enabled, case fn, artifact stem, equivalence key, label)
         (args.ingest_only, _ingest_case, "BENCH_ingest", "equivalent",
@@ -491,6 +563,8 @@ if __name__ == "__main__":
          "render"),
         (args.shard_only, _shard_case, "BENCH_shard", "byte_identical",
          "shard"),
+        (args.append_only, _append_case, "BENCH_append", "byte_identical",
+         "append"),
         (args.persist_only, _persist_case, "BENCH_persist", "round_trip_ok",
          "persist"),
     ]

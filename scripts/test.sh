@@ -4,7 +4,8 @@
 #
 #   TIER=smoke scripts/test.sh    # reproduce the CI job in one command:
 #                                 # analysis-layer tests, the ingest/render/
-#                                 # shard/persist smoke benches, and the
+#                                 # shard/append/persist smoke benches, a
+#                                 # `session watch --once` smoke, and the
 #                                 # bench-trajectory gate (no jax compilation)
 set -u
 cd "$(dirname "$0")/.."
@@ -15,7 +16,8 @@ if [ "${TIER:-full}" = "smoke" ]; then
     python -m pytest -x -q \
         tests/test_ingest.py tests/test_render.py tests/test_report.py \
         tests/test_session.py tests/test_detect.py tests/test_tracer.py \
-        tests/test_shard.py tests/test_commcheck.py \
+        tests/test_shard.py tests/test_commcheck.py tests/test_append.py \
+        tests/test_watch.py \
         "$@"
     rc=$?
     if [ "$rc" -ne 0 ]; then
@@ -23,14 +25,26 @@ if [ "${TIER:-full}" = "smoke" ]; then
     fi
     python -m repro.core.session lint examples/hlo/*.txt \
         --mesh 2,4 --axes data,model --fail-on critical || exit $?
+    # live-profiling smoke: drain a synthetic dump dir in --once mode
+    rm -rf results/watch_smoke
+    python -c "import sys; sys.path.insert(0, 'src'); \
+from repro.core.synth import write_hlo_dump; \
+write_hlo_dump('results/watch_smoke/dump', n_files=2, \
+sites_per_file=400, seed=0)" || exit $?
+    python -m repro.core.session watch results/watch_smoke/dump --once \
+        --settle 0 --interval 0.05 --quiet \
+        --summary results/watch_smoke/summary.json \
+        --report-json results/watch_smoke/report.json || exit $?
     python benchmarks/bench_overhead.py --ingest-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --render-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --shard-only --sites 50000 || exit $?
+    python benchmarks/bench_overhead.py --append-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --persist-only --sites 20000 || exit $?
     python scripts/bench_gate.py \
         results/BENCH_ingest_smoke.json:BENCH_ingest.json \
         results/BENCH_render_smoke.json:BENCH_render.json \
         results/BENCH_shard_smoke.json:BENCH_shard.json:0.5 \
+        results/BENCH_append_smoke.json:BENCH_append.json:0.5 \
         results/BENCH_persist_smoke.json:BENCH_persist.json:0.55
     exit $?
 fi

@@ -104,6 +104,190 @@ def _axis_prod(mesh: MeshSpec, axes: Tuple[str, ...]) -> int:
     return p
 
 
+def _table_counts(table, nd: int) -> np.ndarray:
+    """Per-device appearance counts of one group table (value-based
+    sibling of `store.table_device_counts`; out-of-range ids dropped)."""
+    counts = np.zeros(nd, dtype=np.int64)
+    for g in table:
+        for d in g:
+            d = int(d)
+            if 0 <= d < nd:
+                counts[d] += 1
+    return counts
+
+
+# --------------------------------------------------------------------------
+# per-unit analysis bodies — computed from table *values*, so the batch
+# checkers below and the streaming `CommcheckState` produce identical
+# findings for the same unit regardless of which store's codes carried it
+# --------------------------------------------------------------------------
+
+def _group_table_finding(table, mesh: MeshSpec, sites: int,
+                         kw: Dict) -> Optional[Finding]:
+    """Structural verdict on one unique replica-group table (<= 1 finding)."""
+    nd = mesh.num_devices
+    flat = [int(d) for g in table for d in g]
+    bad = sorted({d for d in flat if d < 0 or d >= nd})
+    if bad:
+        return Finding(
+            "device_out_of_range", "critical",
+            f"replica groups at {sites} site(s) name device(s) "
+            f"[{_fmt_devices(bad)}] outside the {nd}-device mesh", **kw)
+    seen: Dict[int, int] = {}
+    for d in flat:
+        seen[d] = seen.get(d, 0) + 1
+    dups = sorted(d for d, c in seen.items() if c > 1)
+    if dups:
+        return Finding(
+            "group_overlap", "critical",
+            f"device(s) [{_fmt_devices(dups)}] appear in more than one "
+            f"replica group of the same collective at {sites} site(s) — "
+            f"groups must be disjoint", **kw)
+    sizes = sorted({len(g) for g in table})
+    if sizes and sizes[-1] <= 1:
+        return Finding(
+            "degenerate_group", "info",
+            f"all replica groups are size 1 at {sites} site(s) — the "
+            f"collective moves no data (dead comm)", **kw)
+    if len(sizes) > 1:
+        return Finding(
+            "group_mesh_mismatch", "warn",
+            f"ragged replica groups (sizes {sizes}) at {sites} site(s) "
+            f"— the groups of one collective should tile the mesh "
+            f"uniformly", **kw)
+    # uniform sizes: each group must evenly tile the axes it spans
+    bad_groups = 0
+    example: Tuple[str, ...] = ()
+    for g in table:
+        if len(g) <= 1:
+            continue
+        va = varying_axes(mesh, g)
+        if _axis_prod(mesh, va) % len(g):
+            bad_groups += 1
+            example = va
+    if bad_groups:
+        return Finding(
+            "group_mesh_mismatch", "warn",
+            f"{bad_groups}/{len(table)} replica group(s) of size "
+            f"{sizes[0]} at {sites} site(s) do not evenly tile the mesh "
+            f"axes they span {example} — group sizes should divide the "
+            f"spanned axis product", **kw)
+    return None
+
+
+def _permute_table_findings(pairs, nd: int, sites: int,
+                            kw: Dict) -> List[Finding]:
+    """Range / fan-in / fan-out / self-loop checks on one pair table."""
+    out: List[Finding] = []
+    pairs = np.asarray(pairs, dtype=np.int64).reshape(-1, 2)
+    if ((pairs < 0) | (pairs >= nd)).any():
+        bad = np.unique(pairs[(pairs < 0) | (pairs >= nd)])
+        out.append(Finding(
+            "device_out_of_range", "critical",
+            f"collective-permute pairs at {sites} site(s) name "
+            f"device(s) [{_fmt_devices(bad)}] outside the {nd}-device "
+            f"mesh", **kw))
+        return out
+    src, dst = pairs[:, 0], pairs[:, 1]
+    if len(np.unique(dst)) < len(dst):
+        out.append(Finding(
+            "permute_dup_target", "critical",
+            f"collective-permute at {sites} site(s) lists a target "
+            f"device more than once — two sources write the same "
+            f"destination buffer", **kw))
+    elif len(np.unique(src)) < len(src):
+        out.append(Finding(
+            "permute_dup_source", "warn",
+            f"collective-permute at {sites} site(s) sends from the "
+            f"same source more than once (multicast) — check the "
+            f"intended ring/shift pattern", **kw))
+    n_self = int((src == dst).sum())
+    if n_self:
+        out.append(Finding(
+            "permute_self_loop", "info",
+            f"{n_self} self-loop pair(s) in a collective-permute at "
+            f"{sites} site(s) — those transfers move no data", **kw))
+    return out
+
+
+def _f_coverage_singleton(sites: int, missing, nd: int, **kw) -> Finding:
+    return Finding(
+        "group_coverage", "critical",
+        f"{sites} collective site(s) leave {len(missing)} of "
+        f"{nd} devices out of every replica group (missing: "
+        f"[{_fmt_devices(missing)}]) — in SPMD every device "
+        f"executes the op, so the excluded ranks hang", **kw)
+
+
+def _class_findings(chan: int, members: Sequence[Tuple],
+                    tables: Dict, mesh: MeshSpec, kw: Dict) -> List[Finding]:
+    """Signature + match-graph checks on one multi-site channel class.
+
+    `members` are `(kind, bytes, dtype, multiplicity, table_key)` value
+    tuples in row order; `tables` maps each referenced table key to the
+    table itself.
+    """
+    out: List[Finding] = []
+    nd = mesh.num_devices
+    kind_names = {m[0] for m in members}
+    if len(kind_names) > 1:
+        names = sorted(kind_names)
+        out.append(Finding(
+            "channel_collision", "critical",
+            f"channel {chan} is reused by {len(members)} sites of "
+            f"different collective kinds ({', '.join(names)}) — a "
+            f"channel id must identify one collective instance", **kw))
+        return out
+    kind = members[0][0]
+    sigs = {(m[1], m[2]) for m in members}
+    if len(sigs) > 1:
+        blist = sorted({b for b, _ in sigs})
+        dlist = sorted({d for _, d in sigs})
+        out.append(Finding(
+            "shape_mismatch", "critical",
+            f"sites matched on channel {chan} disagree on payload "
+            f"shape/dtype (bytes {blist}, dtypes {dlist}) — matched "
+            f"{kind} participants must agree elementwise", **kw))
+        return out
+    # per-device instance counts across the class
+    counts = np.zeros(nd, dtype=np.int64)
+    cnt_by_key = {key: _table_counts(t, nd) for key, t in tables.items()}
+    for m in members:
+        counts += m[3] * cnt_by_key[m[4]]
+    if (counts == 0).any():
+        missing = np.flatnonzero(counts == 0)
+        out.append(Finding(
+            "group_coverage", "critical",
+            f"{len(missing)} of {nd} devices never participate in any "
+            f"{kind} on channel {chan} (missing: "
+            f"[{_fmt_devices(missing)}]) — the excluded ranks hang",
+            **kw))
+    if len(tables) > 1:
+        # match graph: devices sharing a group are matched partners
+        uf = _UnionFind(nd)
+        for t in tables.values():
+            for g in t:
+                ok = [int(d) for d in g if 0 <= int(d) < nd]
+                for d in ok[1:]:
+                    uf.union(ok[0], d)
+        comps: Dict[int, List[int]] = {}
+        for d in np.flatnonzero(counts > 0):
+            comps.setdefault(uf.find(int(d)), []).append(int(d))
+        for comp in comps.values():
+            cs = counts[comp]
+            lo, hi = int(cs.min()), int(cs.max())
+            if lo != hi:
+                out.append(Finding(
+                    "deadlock_order", "critical",
+                    f"devices matched on channel {chan} disagree on how "
+                    f"many {kind} instances they execute ({lo} vs {hi} "
+                    f"across {len(comp)} connected devices) — the "
+                    f"ranks expecting the extra instance block forever "
+                    f"(mismatched collective ordering)", **kw))
+                break
+    return out
+
+
 # --------------------------------------------------------------------------
 # family 2: replica-group validation (per unique table)
 # --------------------------------------------------------------------------
@@ -129,65 +313,16 @@ def check_replica_groups(store: TraceStore, mesh: MeshSpec) -> List[Finding]:
     ts = np.bincount(gc, weights=t_s[ring_rows], minlength=n_tables)
     nrows = np.bincount(gc, minlength=n_tables)
     first = _first_row_per_code(gc, ring_rows, n_tables)
-    cnt = store.table_device_counts(nd)
-    tcode, _gidx, dev = store.expand_groups()
-    oob = (dev < 0) | (dev >= nd)
-    oob_tables = set(np.unique(tcode[oob]).tolist()) if oob.any() else set()
 
     for t in range(n_tables):
         if nrows[t] == 0:
             continue
-        table = store.group_tables[t]
-        sites = int(nrows[t])
         kw = dict(wasted_bytes=float(wb[t]), time_at_risk_s=float(ts[t]),
                   site=store.names[first[t]] if first[t] >= 0 else f"groups#{t}")
-        if t in oob_tables:
-            bad = np.unique(dev[(tcode == t) & oob])
-            out.append(Finding(
-                "device_out_of_range", "critical",
-                f"replica groups at {sites} site(s) name device(s) "
-                f"[{_fmt_devices(bad)}] outside the {nd}-device mesh",
-                **kw))
-            continue
-        if (cnt[t] > 1).any():
-            dups = np.flatnonzero(cnt[t] > 1)
-            out.append(Finding(
-                "group_overlap", "critical",
-                f"device(s) [{_fmt_devices(dups)}] appear in more than one "
-                f"replica group of the same collective at {sites} site(s) — "
-                f"groups must be disjoint", **kw))
-            continue
-        sizes = sorted({len(g) for g in table})
-        if sizes and sizes[-1] <= 1:
-            out.append(Finding(
-                "degenerate_group", "info",
-                f"all replica groups are size 1 at {sites} site(s) — the "
-                f"collective moves no data (dead comm)", **kw))
-            continue
-        if len(sizes) > 1:
-            out.append(Finding(
-                "group_mesh_mismatch", "warn",
-                f"ragged replica groups (sizes {sizes}) at {sites} site(s) "
-                f"— the groups of one collective should tile the mesh "
-                f"uniformly", **kw))
-            continue
-        # uniform sizes: each group must evenly tile the axes it spans
-        bad_groups = 0
-        example: Tuple[str, ...] = ()
-        for g in table:
-            if len(g) <= 1:
-                continue
-            va = varying_axes(mesh, g)
-            if _axis_prod(mesh, va) % len(g):
-                bad_groups += 1
-                example = va
-        if bad_groups:
-            out.append(Finding(
-                "group_mesh_mismatch", "warn",
-                f"{bad_groups}/{len(table)} replica group(s) of size "
-                f"{sizes[0]} at {sites} site(s) do not evenly tile the mesh "
-                f"axes they span {example} — group sizes should divide the "
-                f"spanned axis product", **kw))
+        f = _group_table_finding(store.group_tables[t], mesh,
+                                 int(nrows[t]), kw)
+        if f is not None:
+            out.append(f)
     return out
 
 
@@ -259,74 +394,20 @@ def check_matches(store: TraceStore, mesh: MeshSpec) -> List[Finding]:
         for t in np.unique(store.group_code[bad]):
             rows_t = bad[store.group_code[bad] == t]
             missing = np.flatnonzero(~present_t[t])
-            out.append(Finding(
-                "group_coverage", "critical",
-                f"{len(rows_t)} collective site(s) leave {len(missing)} of "
-                f"{nd} devices out of every replica group (missing: "
-                f"[{_fmt_devices(missing)}]) — in SPMD every device "
-                f"executes the op, so the excluded ranks hang",
+            out.append(_f_coverage_singleton(
+                len(rows_t), missing, nd,
                 site=store.names[int(rows_t[0])], **_risk(store, rows_t)))
 
     # -- multi-site classes: signature + match-graph checks -----------------
     for chan, rows in multi:
         kw = dict(site=f"channel {chan}", **_risk(store, rows))
-        kinds = np.unique(store.kind.codes[rows])
-        if len(kinds) > 1:
-            names = sorted(store.kind.vocab[int(k)] for k in kinds)
-            out.append(Finding(
-                "channel_collision", "critical",
-                f"channel {chan} is reused by {len(rows)} sites of "
-                f"different collective kinds ({', '.join(names)}) — a "
-                f"channel id must identify one collective instance", **kw))
-            continue
-        kind = store.kind.vocab[int(kinds[0])]
-        sigs = {(int(b), int(d)) for b, d in
-                zip(store.operand_bytes[rows], store.dtype.codes[rows])}
-        if len(sigs) > 1:
-            blist = sorted({b for b, _ in sigs})
-            dlist = sorted({store.dtype.vocab[d] for _, d in sigs})
-            out.append(Finding(
-                "shape_mismatch", "critical",
-                f"sites matched on channel {chan} disagree on payload "
-                f"shape/dtype (bytes {blist}, dtypes {dlist}) — matched "
-                f"{kind} participants must agree elementwise", **kw))
-            continue
-        # per-device instance counts across the class
-        counts = np.zeros(nd, dtype=np.int64)
-        tables = np.unique(store.group_code[rows])
-        for r in rows:
-            counts += int(store.multiplicity[r]) * cnt_t[store.group_code[r]]
-        if (counts == 0).any():
-            missing = np.flatnonzero(counts == 0)
-            out.append(Finding(
-                "group_coverage", "critical",
-                f"{len(missing)} of {nd} devices never participate in any "
-                f"{kind} on channel {chan} (missing: "
-                f"[{_fmt_devices(missing)}]) — the excluded ranks hang",
-                **kw))
-        if len(tables) > 1:
-            # match graph: devices sharing a group are matched partners
-            uf = _UnionFind(nd)
-            for t in tables:
-                for g in store.group_tables[int(t)]:
-                    ok = [d for d in g if 0 <= d < nd]
-                    for d in ok[1:]:
-                        uf.union(ok[0], d)
-            comps: Dict[int, List[int]] = {}
-            for d in np.flatnonzero(counts > 0):
-                comps.setdefault(uf.find(int(d)), []).append(int(d))
-            for members in comps.values():
-                cs = counts[members]
-                lo, hi = int(cs.min()), int(cs.max())
-                if lo != hi:
-                    out.append(Finding(
-                        "deadlock_order", "critical",
-                        f"devices matched on channel {chan} disagree on how "
-                        f"many {kind} instances they execute ({lo} vs {hi} "
-                        f"across {len(members)} connected devices) — the "
-                        f"ranks expecting the extra instance block forever "
-                        f"(mismatched collective ordering)", **kw))
-                    break
+        members = [(store.kind.value(int(r)), int(store.operand_bytes[r]),
+                    store.dtype.value(int(r)), int(store.multiplicity[r]),
+                    int(store.group_code[r])) for r in rows]
+        tables = {}
+        for m in members:
+            tables.setdefault(m[4], store.group_tables[m[4]])
+        out += _class_findings(chan, members, tables, mesh, kw)
     return out
 
 
@@ -352,37 +433,10 @@ def check_permutes(store: TraceStore, mesh: MeshSpec) -> List[Finding]:
     for t in range(n_t):
         if nrows[t] == 0:
             continue
-        pairs = np.asarray(store.stp_tables[t], dtype=np.int64).reshape(-1, 2)
-        sites = int(nrows[t])
         kw = dict(wasted_bytes=float(wb[t]), time_at_risk_s=float(ts[t]),
                   site=store.names[first[t]] if first[t] >= 0 else f"pairs#{t}")
-        if ((pairs < 0) | (pairs >= nd)).any():
-            bad = np.unique(pairs[(pairs < 0) | (pairs >= nd)])
-            out.append(Finding(
-                "device_out_of_range", "critical",
-                f"collective-permute pairs at {sites} site(s) name "
-                f"device(s) [{_fmt_devices(bad)}] outside the {nd}-device "
-                f"mesh", **kw))
-            continue
-        src, dst = pairs[:, 0], pairs[:, 1]
-        if len(np.unique(dst)) < len(dst):
-            out.append(Finding(
-                "permute_dup_target", "critical",
-                f"collective-permute at {sites} site(s) lists a target "
-                f"device more than once — two sources write the same "
-                f"destination buffer", **kw))
-        elif len(np.unique(src)) < len(src):
-            out.append(Finding(
-                "permute_dup_source", "warn",
-                f"collective-permute at {sites} site(s) sends from the "
-                f"same source more than once (multicast) — check the "
-                f"intended ring/shift pattern", **kw))
-        n_self = int((src == dst).sum())
-        if n_self:
-            out.append(Finding(
-                "permute_self_loop", "info",
-                f"{n_self} self-loop pair(s) in a collective-permute at "
-                f"{sites} site(s) — those transfers move no data", **kw))
+        out += _permute_table_findings(store.stp_tables[t], nd,
+                                       int(nrows[t]), kw)
     return out
 
 
@@ -520,3 +574,162 @@ def check_trace(trace: Trace, mesh: Optional[MeshSpec] = None,
         except (ValueError, IndexError, KeyError):
             pass    # un-annotatable (e.g. out-of-range devices): rank by 0
     return rank_findings(check_store(store, mesh))
+
+
+# --------------------------------------------------------------------------
+# streaming analysis — fold appended chunks, re-render fresh findings
+# --------------------------------------------------------------------------
+
+class CommcheckState:
+    """Streaming `check_store`: absorb ingested chunks, render on demand.
+
+    `update(store)` folds one (annotated) chunk in; `findings()` then
+    returns the ranked findings a batch `check_trace` would produce over
+    the union of all chunks seen so far.  Retained state is
+    compiled-program-shaped: unique group/pair tables with per-table
+    site/risk sums, plus one small member record per channel-carrying
+    row — channel match classes cannot be collapsed early because a
+    later chunk may add members that flip a singleton into a multi-site
+    class.  The analysis bodies (`_group_table_finding`,
+    `_class_findings`, `_permute_table_findings`) are shared with the
+    batch checkers, so messages are string-identical; accumulated risk
+    sums group per chunk and are close, not bitwise-equal, to one batch
+    pass.
+    """
+
+    def __init__(self, mesh: MeshSpec):
+        self.mesh = mesh
+        self._off = 0    # global row offset across chunks
+        # value-key -> table, insertion order == the union store's
+        # first-seen table code order (chunks intern in row order, and
+        # we fold chunk tables in their code order, exactly like merge)
+        self._gtables: Dict[Tuple, List] = {}
+        self._ptables: Dict[Tuple, List] = {}
+        self._gstat: Dict[Tuple, Dict] = {}     # ring rows per group table
+        self._pstat: Dict[Tuple, Dict] = {}     # permute rows per pair table
+        self._nochan: Dict[Tuple, Dict] = {}    # channel-less ring rows
+        self._chan: Dict[int, List[Dict]] = {}  # channel -> member records
+
+    @staticmethod
+    def _fold(stat: Dict[Tuple, Dict], key: Tuple, sites: int, wb: float,
+              ts: float, first: Optional[Tuple[int, str]]) -> None:
+        st = stat.setdefault(key, {"sites": 0, "wb": 0.0, "ts": 0.0,
+                                   "first": None})
+        st["sites"] += sites
+        st["wb"] += wb
+        st["ts"] += ts
+        if first is not None and (st["first"] is None
+                                  or first < st["first"]):
+            st["first"] = first
+
+    def update(self, store: TraceStore) -> None:
+        gkeys = []
+        for table in store.group_tables:
+            key = tuple(tuple(int(x) for x in g) for g in table)
+            self._gtables.setdefault(key, table)
+            gkeys.append(key)
+        pkeys = []
+        for t in store.stp_tables:
+            key = tuple((int(a), int(b)) for a, b in t)
+            self._ptables.setdefault(key, t)
+            pkeys.append(key)
+        if store.n == 0:
+            return
+        w = store.wire_total * store.weights
+        t_s = store.est_time_s * store.weights
+        ring_rows = np.flatnonzero(store.stp_code < 0)
+        stp_rows = np.flatnonzero(store.stp_code >= 0)
+
+        def fold_rows(stat, rows, code, keys):
+            n_t = len(keys)
+            if not n_t or not len(rows):
+                return
+            c = code[rows]
+            wb = np.bincount(c, weights=w[rows], minlength=n_t)
+            ts = np.bincount(c, weights=t_s[rows], minlength=n_t)
+            nrows = np.bincount(c, minlength=n_t)
+            first = _first_row_per_code(c, rows, n_t)
+            for t in np.flatnonzero(nrows):
+                fi = int(first[t])
+                self._fold(stat, keys[t], int(nrows[t]), float(wb[t]),
+                           float(ts[t]),
+                           (self._off + fi, store.names[fi]))
+
+        fold_rows(self._gstat, ring_rows, store.group_code, gkeys)
+        fold_rows(self._pstat, stp_rows, store.stp_code, pkeys)
+
+        ch = store.channel_id
+        chan_rows = ring_rows[ch[ring_rows] >= 0]
+        for r in chan_rows.tolist():
+            self._chan.setdefault(int(ch[r]), []).append({
+                "kind": store.kind.value(r),
+                "bytes": int(store.operand_bytes[r]),
+                "dtype": store.dtype.value(r),
+                "mult": int(store.multiplicity[r]),
+                "table": gkeys[store.group_code[r]],
+                "wb": float(w[r]), "ts": float(t_s[r]),
+                "gidx": self._off + r, "name": store.names[r]})
+        nochan_rows = ring_rows[ch[ring_rows] < 0]
+        fold_rows(self._nochan, nochan_rows, store.group_code, gkeys)
+        self._off += store.n
+
+    def findings(self) -> List[Finding]:
+        mesh = self.mesh
+        nd = mesh.num_devices
+        out: List[Finding] = []
+        # family 2: replica-group structure, in union table order
+        for key, table in self._gtables.items():
+            st = self._gstat.get(key)
+            if not st:
+                continue
+            kw = dict(wasted_bytes=st["wb"], time_at_risk_s=st["ts"],
+                      site=st["first"][1])
+            f = _group_table_finding(table, mesh, st["sites"], kw)
+            if f is not None:
+                out.append(f)
+        # family 1: matches.  Singleton classes = channel-less rows plus
+        # channels that (so far) have exactly one member.
+        singles: Dict[Tuple, Dict] = {}
+        for key, st in self._nochan.items():
+            self._fold(singles, key, st["sites"], st["wb"], st["ts"],
+                       st["first"])
+        for chan in sorted(self._chan):
+            members = self._chan[chan]
+            if len(members) == 1:
+                m = members[0]
+                self._fold(singles, m["table"], 1, m["wb"], m["ts"],
+                           (m["gidx"], m["name"]))
+        for key, table in self._gtables.items():
+            st = singles.get(key)
+            if not st:
+                continue
+            present = _table_counts(table, nd) > 0
+            missing = np.flatnonzero(~present)
+            if len(missing):
+                out.append(_f_coverage_singleton(
+                    st["sites"], missing, nd, site=st["first"][1],
+                    wasted_bytes=st["wb"], time_at_risk_s=st["ts"]))
+        for chan in sorted(self._chan):
+            members = self._chan[chan]
+            if len(members) < 2:
+                continue
+            kw = dict(site=f"channel {chan}",
+                      wasted_bytes=sum(m["wb"] for m in members),
+                      time_at_risk_s=sum(m["ts"] for m in members))
+            tables = {}
+            for m in members:
+                tables.setdefault(m["table"], self._gtables[m["table"]])
+            out += _class_findings(
+                chan,
+                [(m["kind"], m["bytes"], m["dtype"], m["mult"], m["table"])
+                 for m in members],
+                tables, mesh, kw)
+        # permute pair tables, in union table order
+        for key, pairs in self._ptables.items():
+            st = self._pstat.get(key)
+            if not st:
+                continue
+            kw = dict(wasted_bytes=st["wb"], time_at_risk_s=st["ts"],
+                      site=st["first"][1])
+            out += _permute_table_findings(pairs, nd, st["sites"], kw)
+        return rank_findings(out)

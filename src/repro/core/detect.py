@@ -13,11 +13,11 @@ scans no longer walk Python objects.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.events import Trace
+from repro.core.events import HloOpStats, Trace
 from repro.core.topology import Hardware, V5E
 
 # severity -> rank; lower sorts first.  Shared by the dynamic detectors
@@ -65,6 +65,60 @@ def rank_findings(findings: List[Finding]) -> List[Finding]:
                                  -f.wasted_bytes))
 
 
+# -- finding constructors ----------------------------------------------------
+# Shared by the batch detectors below and the streaming `DetectorState`:
+# one message format, so incremental findings are string-identical to a
+# batch run over the same union of rows.
+
+def _f_redundant(count: int, kind: str, nbytes: int, link: str, scope: str,
+                 comp: str, mult: int) -> Finding:
+    return Finding(
+        "redundant_collective", "warn",
+        f"{count}x identical {kind} of {nbytes/1e6:.1f} MB "
+        f"on {link} "
+        f"(scope '{scope or '-'}', "
+        f"comp '{comp}') — candidates for CSE "
+        f"or re-materialization of the gathered value",
+        wasted_bytes=(count - 1) * nbytes * mult, site=scope)
+
+
+def _f_detour(sem: str, kind: str, nbytes: int, axes, want: str, scope: str,
+              mult: int) -> Finding:
+    return Finding(
+        "axis_detour", "warn",
+        f"{sem} {kind} "
+        f"({nbytes/1e6:.1f} MB) spans "
+        f"axes {axes}, expected only '{want}' — check the "
+        f"PartitionSpec feeding scope '{scope or '-'}'",
+        wasted_bytes=nbytes * mult, site=scope)
+
+
+def _f_eager(n: int, lat: float, hw: Hardware) -> Finding:
+    return Finding(
+        "eager_flood", "info",
+        f"{n} latency-bound collectives/step (< {hw.rndv_threshold/1024:.0f} KiB "
+        f"payload/shard), ~{lat*1e6:.0f} us serialized latency — consider "
+        f"fusing/batching small collectives or increasing scan body size",
+        time_at_risk_s=lat)
+
+
+def _f_layout(op_stats: HloOpStats) -> Finding:
+    return Finding(
+        "layout_thrash", "info",
+        f"{op_stats.transpose_bytes/1e9:.2f} GB of transpose/copy traffic "
+        f"({op_stats.n_transpose} ops) — review operand layouts or "
+        f"einsum dimension orders adjacent to collectives")
+
+
+def _f_cross_pod(total: float, count: int) -> Finding:
+    return Finding(
+        "cross_pod_bulk", "warn",
+        f"{total/1e9:.2f} GB/step crosses the inter-pod DCI "
+        f"({count} collectives) — hierarchical reduction "
+        f"(in-pod reduce-scatter, cross-pod exchange of 1/pod_size) or "
+        f"gradient compression recommended")
+
+
 def detect_redundant_gathers(trace: Trace) -> List[Finding]:
     """Same tensor gathered more than once per execution context.
 
@@ -87,17 +141,10 @@ def detect_redundant_gathers(trace: Trace) -> List[Finding]:
     for g in np.flatnonzero(counts > 1):
         members = idx[inv == g]
         last = int(members[-1])
-        count = int(counts[g])
-        nbytes = int(s.operand_bytes[last])
-        wasted = (count - 1) * nbytes * int(s.multiplicity[last])
-        out.append(Finding(
-            "redundant_collective", "warn",
-            f"{count}x identical {s.kind.value(last)} of {nbytes/1e6:.1f} MB "
-            f"on {s.link_class.value(last)} "
-            f"(scope '{s.scope.value(last) or '-'}', "
-            f"comp '{s.computation.value(last)}') — candidates for CSE "
-            f"or re-materialization of the gathered value",
-            wasted_bytes=wasted, site=s.scope.value(last)))
+        out.append(_f_redundant(
+            int(counts[g]), s.kind.value(last), int(s.operand_bytes[last]),
+            s.link_class.value(last), s.scope.value(last),
+            s.computation.value(last), int(s.multiplicity[last])))
     return out
 
 
@@ -121,15 +168,10 @@ def detect_axis_detours(trace: Trace, expected: Dict[str, str],
             continue
         want = expected[s.semantic.value(i)]
         if any(a != want for a in axes):
-            nbytes = int(s.operand_bytes[i])
-            out.append(Finding(
-                "axis_detour", "warn",
-                f"{s.semantic.value(i)} {s.kind.value(i)} "
-                f"({nbytes/1e6:.1f} MB) spans "
-                f"axes {axes}, expected only '{want}' — check the "
-                f"PartitionSpec feeding scope '{s.scope.value(i) or '-'}'",
-                wasted_bytes=nbytes * int(s.multiplicity[i]),
-                site=s.scope.value(i)))
+            out.append(_f_detour(
+                s.semantic.value(i), s.kind.value(i),
+                int(s.operand_bytes[i]), axes, want, s.scope.value(i),
+                int(s.multiplicity[i])))
     return out
 
 
@@ -144,12 +186,7 @@ def detect_eager_floods(trace: Trace, hw: Hardware = V5E,
     n = int(s.multiplicity[mask].sum())
     if n >= min_count:
         lat = float((s.est_time_s[mask] * s.weights[mask]).sum())
-        return [Finding(
-            "eager_flood", "info",
-            f"{n} latency-bound collectives/step (< {hw.rndv_threshold/1024:.0f} KiB "
-            f"payload/shard), ~{lat*1e6:.0f} us serialized latency — consider "
-            f"fusing/batching small collectives or increasing scan body size",
-            time_at_risk_s=lat)]
+        return [_f_eager(n, lat, hw)]
     return []
 
 
@@ -157,11 +194,7 @@ def detect_layout_thrash(trace: Trace, threshold_bytes: float = 1 << 30) -> List
     """Heavy transpose/copy traffic around sharded ops (layout mismatch)."""
     tb = trace.op_stats.transpose_bytes
     if tb > threshold_bytes:
-        return [Finding(
-            "layout_thrash", "info",
-            f"{tb/1e9:.2f} GB of transpose/copy traffic "
-            f"({trace.op_stats.n_transpose} ops) — review operand layouts or "
-            f"einsum dimension orders adjacent to collectives")]
+        return [_f_layout(trace.op_stats)]
     return []
 
 
@@ -172,12 +205,7 @@ def detect_cross_pod_bulk(trace: Trace) -> List[Finding]:
     total = float((s.wire_total[mask] * s.weights[mask]).sum())
     out = []
     if total > 1 << 30:
-        out.append(Finding(
-            "cross_pod_bulk", "warn",
-            f"{total/1e9:.2f} GB/step crosses the inter-pod DCI "
-            f"({int(mask.sum())} collectives) — hierarchical reduction "
-            f"(in-pod reduce-scatter, cross-pod exchange of 1/pod_size) or "
-            f"gradient compression recommended"))
+        out.append(_f_cross_pod(total, int(mask.sum())))
     return out
 
 
@@ -192,3 +220,88 @@ def run_all(trace: Trace, expected_axes: Dict[str, str] | None = None,
     findings += detect_layout_thrash(trace)
     findings += detect_cross_pod_bulk(trace)
     return rank_findings(findings)
+
+
+class DetectorState:
+    """Streaming `run_all`: fold ingested chunks in, render fresh findings.
+
+    `update(trace)` absorbs one file/chunk; `findings()` then returns
+    what `run_all` would report over the *union* of every chunk seen so
+    far, without rescanning old rows — per-detector sufficient
+    statistics (composite-key counts for redundant collectives, eager /
+    cross-pod sums, merged op stats) are all that is retained, so state
+    is sized by unique keys, not rows.  Messages reuse the same
+    constructors as the batch detectors and are string-identical; the
+    accumulated float sums group per chunk, so they are close (not
+    bitwise) to a single batch pass, and equal-severity/equal-bytes ties
+    may order differently under `rank_findings`' stable sort.
+    """
+
+    def __init__(self, expected_axes: Optional[Dict[str, str]] = None,
+                 hw: Hardware = V5E, min_count: int = 64,
+                 thrash_threshold: float = 1 << 30):
+        self.expected_axes = expected_axes
+        self.hw = hw
+        self.min_count = min_count
+        self.thrash_threshold = thrash_threshold
+        # (kind, link, scope, comp, bytes) -> {count, mult-of-last-member}
+        self._redundant: Dict[Tuple, Dict[str, int]] = {}
+        self._detours: List[Finding] = []
+        self._eager_n = 0
+        self._eager_lat = 0.0
+        self._op = HloOpStats()
+        self._xpod_total = 0.0
+        self._xpod_count = 0
+
+    def update(self, trace: Trace) -> None:
+        s = trace.store
+        self._update_redundant(s)
+        if self.expected_axes:
+            self._detours += detect_axis_detours(trace, self.expected_axes)
+        mask = s.protocol.mask_of("eager")
+        self._eager_n += int(s.multiplicity[mask].sum())
+        self._eager_lat += float((s.est_time_s[mask] * s.weights[mask]).sum())
+        self._op = HloOpStats.merged([self._op, trace.op_stats])
+        mask = s.link_class.mask_prefix(("dci", "xpod"))
+        self._xpod_total += float((s.wire_total[mask] * s.weights[mask]).sum())
+        self._xpod_count += int(mask.sum())
+
+    def _update_redundant(self, s) -> None:
+        # same candidate filter + composite key as the batch detector,
+        # folded by *value* (codes are chunk-local) — a lone candidate
+        # kept here may pair with a duplicate arriving chunks later
+        cand = s.kind.mask_of("all-gather", "all-reduce") \
+            & (s.operand_bytes > (1 << 20))
+        idx = np.flatnonzero(cand)
+        if not len(idx):
+            return
+        key = np.zeros(len(idx), dtype=np.int64)
+        for cat in (s.kind, s.link_class, s.scope, s.computation):
+            key = key * len(cat.vocab) + cat.codes[idx]
+        _, uniq_bytes = np.unique(s.operand_bytes[idx], return_inverse=True)
+        key = key * (uniq_bytes.max() + 1) + uniq_bytes
+        _, inv, counts = np.unique(key, return_inverse=True,
+                                   return_counts=True)
+        for g in range(len(counts)):
+            last = int(idx[inv == g][-1])
+            vkey = (s.kind.value(last), s.link_class.value(last),
+                    s.scope.value(last), s.computation.value(last),
+                    int(s.operand_bytes[last]))
+            rec = self._redundant.setdefault(vkey, {"count": 0, "mult": 1})
+            rec["count"] += int(counts[g])
+            rec["mult"] = int(s.multiplicity[last])
+
+    def findings(self) -> List[Finding]:
+        out = []
+        for (kind, link, scope, comp, nbytes), rec in self._redundant.items():
+            if rec["count"] > 1:
+                out.append(_f_redundant(rec["count"], kind, nbytes, link,
+                                        scope, comp, rec["mult"]))
+        out += self._detours
+        if self._eager_n >= self.min_count:
+            out.append(_f_eager(self._eager_n, self._eager_lat, self.hw))
+        if self._op.transpose_bytes > self.thrash_threshold:
+            out.append(_f_layout(self._op))
+        if self._xpod_total > 1 << 30:
+            out.append(_f_cross_pod(self._xpod_total, self._xpod_count))
+        return rank_findings(out)

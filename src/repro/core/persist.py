@@ -1,0 +1,44 @@
+"""Atomic file persistence — write a same-directory temp file, then
+`os.replace` it into place.
+
+Every on-disk artifact this package produces (session saves, report
+JSON/HTML, bench payloads, the watch daemon's rolling outputs) may be
+read concurrently: the watch daemon re-emits them every poll while CI
+artifact collection or a browser reload reads them.  A plain
+`open(path, "w")` exposes truncated intermediate states to those
+readers; renaming a fully-written sibling is atomic on POSIX, so a
+reader sees either the old artifact or the new one — never a torn file.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import tempfile
+
+
+@contextlib.contextmanager
+def atomic_open(path: str, mode: str = "w"):
+    """`open(path, mode)` with atomic-replace semantics.
+
+    Yields a file object over a temp file created in `path`'s directory
+    (same filesystem, so the final rename cannot cross a mount).  On
+    clean exit the temp file is flushed, fsync'd, and renamed over
+    `path`; on any error it is removed and `path` is left untouched.
+    `mode` must be a write mode ("w" or "wb").
+    """
+    if mode not in ("w", "wb"):
+        raise ValueError(f"atomic_open requires a write mode, got {mode!r}")
+    target = os.path.abspath(path)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(target),
+                               prefix=os.path.basename(target) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, mode) as f:
+            yield f
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, target)
+    except BaseException:
+        with contextlib.suppress(OSError):
+            os.unlink(tmp)
+        raise

@@ -24,6 +24,13 @@ CLI:
     python -m repro.core.session report PATH [LABEL] [--format json|html] \\
                                         [--out FILE] [--stream] \\
                                         [--chunk-sites N]
+    python -m repro.core.session watch ROOT [--pattern *.txt] [--mesh 2,4] \\
+                                        [--axes data,model] [--out PATH] \\
+                                        [--report-json PATH] \\
+                                        [--report-html PATH] \\
+                                        [--summary PATH] [--settle S] \\
+                                        [--interval S] [--once] \\
+                                        [--fail-on SEV] [--max-rounds N]
     python -m repro.core.session lint  PATH [PATH ...] [--mesh 2,4] \\
                                         [--axes data,model] [--json] \\
                                         [--fail-on critical|warn|info|never]
@@ -36,6 +43,11 @@ CLI:
 same stable finding schema under --json and exit 1 when any finding
 reaches the --fail-on severity (default: critical for lint, never for
 detect), 2 on input errors.
+
+`watch` is the live-profiling daemon (see `repro.core.watch`): it tails
+an HLO dump directory, ingests new/changed files incrementally
+(append-mode stores + streaming detector/lint state), and re-emits its
+outputs atomically every poll; `--once` drains the directory and exits.
 """
 from __future__ import annotations
 
@@ -49,6 +61,7 @@ import numpy as np
 
 from repro.core.events import HloOpStats, Trace
 from repro.core.hlo_parser import AUTO_SHARD_BYTES
+from repro.core.persist import atomic_open
 from repro.core.store import TraceStore
 from repro.core.topology import Hardware, MeshSpec, V5E
 
@@ -91,6 +104,16 @@ def _trace_from_meta(meta: Dict[str, object], store: TraceStore) -> Trace:
 # bulk ingest — many HLO dumps -> one session, fanned out across processes
 # --------------------------------------------------------------------------
 
+class IngestError(RuntimeError):
+    """A specific input failed to ingest.
+
+    Raised by `TraceSession.from_hlo` with the offending file/label in
+    the message (chained to the original error) — a genuine per-file
+    failure must not be mistaken for pool unavailability and silently
+    retried serially.
+    """
+
+
 def _ingest_one(job) -> Trace:
     """Worker: ingest one (label, hlo_text) through the columnar pipeline.
 
@@ -104,17 +127,20 @@ def _ingest_one(job) -> Trace:
 
 
 def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str,
-                 shards: Optional[int]) -> List:
-    jobs = []
+                 shards: Optional[int]) -> Tuple[List, List[str]]:
+    """(worker jobs, per-job source names for error attribution)."""
+    jobs, sources = [], []
     for it in items:
         if isinstance(it, (tuple, list)):
             label, text = it
+            sources.append(label)
         else:
             label = os.path.splitext(os.path.basename(str(it)))[0]
             with open(it) as f:
                 text = f.read()
+            sources.append(str(it))
         jobs.append((label, text, mesh, hw, engine, shards))
-    return jobs
+    return jobs, sources
 
 
 class TraceSession:
@@ -237,8 +263,11 @@ class TraceSession:
         files (label = file stem).  Each file runs the full columnar
         pipeline (parse -> annotate -> attribute) in its own worker
         process; results come back as columnar stores.  Falls back to
-        serial ingest when the pool is unavailable (restricted
-        environments) or for a single file.
+        serial ingest when the *pool* is unavailable (restricted
+        environments, spawn bootstrap failure, pool death) or for a
+        single file — but a genuine per-file failure raises
+        `IngestError` naming the offending input instead of silently
+        re-running everything serially.
 
         `shards` additionally splits each *single* module per-computation
         across workers (`None` = auto above `hlo_parser.AUTO_SHARD_BYTES`,
@@ -251,36 +280,74 @@ class TraceSession:
         if max_workers is None:
             max_workers = min(len(items), os.cpu_count() or 1)
         pool_files = pool_files and max_workers > 1 and len(items) > 1
-        jobs = _ingest_jobs(items, mesh, hw, engine,
-                            (shards or 1) if pool_files else shards)
+        jobs, sources = _ingest_jobs(items, mesh, hw, engine,
+                                     (shards or 1) if pool_files else shards)
         traces: Optional[List[Trace]] = None
         if pool_files:
             import multiprocessing
             import pickle
             from concurrent.futures import ProcessPoolExecutor
             from concurrent.futures.process import BrokenProcessPool
+            from repro.core.hlo_parser import _SPAWN_PROBE_TIMEOUT_S
+
+            # spawn, not fork: the parent often has jax loaded (and so
+            # multiple live threads) by the time a sweep is ingested,
+            # and forking a multithreaded process can deadlock workers.
+            ex = None
             try:
-                # spawn, not fork: the parent often has jax loaded (and so
-                # multiple live threads) by the time a sweep is ingested,
-                # and forking a multithreaded process can deadlock workers.
-                with ProcessPoolExecutor(
-                        max_workers=max_workers,
-                        mp_context=multiprocessing.get_context("spawn")) as ex:
-                    traces = list(ex.map(_ingest_one, jobs))
-            except (BrokenProcessPool, pickle.PicklingError, ImportError,
-                    OSError):
-                # pool unavailable here -> serial per file (texts already
-                # in memory); single-module sharding may still parallelize
+                ex = ProcessPoolExecutor(
+                    max_workers=max_workers,
+                    mp_context=multiprocessing.get_context("spawn"))
+                # no-op probe: where spawn cannot bootstrap workers the
+                # map below hangs rather than raising, so pool *startup*
+                # failure — and only that — is detected here and falls
+                # back to serial ingest
+                ex.submit(int).result(timeout=_SPAWN_PROBE_TIMEOUT_S)
+            except Exception:
+                if ex is not None:
+                    ex.shutdown(wait=False, cancel_futures=True)
+                ex = None
+            if ex is not None:
+                futs = [ex.submit(_ingest_one, j) for j in jobs]
+                try:
+                    traces = []
+                    for src, fut in zip(sources, futs):
+                        try:
+                            traces.append(fut.result())
+                        except (BrokenProcessPool, pickle.PicklingError):
+                            # the pool died, not the input: retry serially
+                            traces = None
+                            break
+                        except Exception as e:
+                            raise IngestError(
+                                f"failed to ingest {src!r}: {e}") from e
+                finally:
+                    ex.shutdown(wait=False, cancel_futures=True)
+            if traces is None:
+                # serial per file (texts already in memory); single-module
+                # sharding may still parallelize inside each parse
                 jobs = [j[:5] + (shards,) for j in jobs]
-                traces = None
         if traces is None:
-            traces = [_ingest_one(j) for j in jobs]
+            traces = []
+            for src, j in zip(sources, jobs):
+                try:
+                    traces.append(_ingest_one(j))
+                except Exception as e:
+                    raise IngestError(f"failed to ingest {src!r}: {e}") from e
         return cls(name, traces)
 
     # -- persistence ---------------------------------------------------------
 
     def save(self, path: str) -> str:
-        """Persist to `path` (.json or .npz, by extension; default .json)."""
+        """Persist to `path` (.json or .npz, by extension; default .json).
+
+        Writes are atomic (same-directory temp file + `os.replace`): a
+        concurrent reader — the watch daemon re-saving every poll while
+        CI collects artifacts — sees the previous complete file or the
+        new one, never a torn intermediate.  Returns the path actually
+        written; `load` applies the same extension defaulting, so
+        `load(p)` works for any extensionless `p` passed to `save`.
+        """
         if path.endswith(".npz"):
             arrs: Dict[str, np.ndarray] = {}
             for i, t in enumerate(self._traces):
@@ -288,19 +355,21 @@ class TraceSession:
             arrs["session"] = np.array(json.dumps({
                 "name": self.name,
                 "traces": [_trace_meta(t) for t in self._traces]}))
-            with open(path, "wb") as f:
+            with atomic_open(path, "wb") as f:
                 np.savez_compressed(f, **arrs)
             return path
         if not path.endswith(".json"):
             path += ".json"
         payload = {"name": self.name,
                    "traces": [trace_to_dict(t) for t in self._traces]}
-        with open(path, "w") as f:
+        with atomic_open(path, "w") as f:
             json.dump(payload, f, separators=(",", ":"))
         return path
 
     @classmethod
     def load(cls, path: str) -> "TraceSession":
+        if not path.endswith((".json", ".npz")):
+            path += ".json"    # mirror save's extension defaulting
         if path.endswith(".npz"):
             with np.load(path) as arrs:
                 side = json.loads(str(arrs["session"]))
@@ -373,6 +442,44 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                         "this many parse shards (default: auto above "
                         f"{AUTO_SHARD_BYTES >> 20}MB, or serial when the "
                         "multi-file pool owns the cores; 1 = serial)")
+
+    p = sub.add_parser("watch", help="tail an HLO dump directory: ingest "
+                                     "new/changed files, keep rolling "
+                                     "reports fresh (live profiling)")
+    p.add_argument("root", help="dump directory to watch")
+    p.add_argument("--pattern", default="*.txt",
+                   help="glob for dump files inside ROOT (default *.txt)")
+    p.add_argument("--mesh", default="2,4",
+                   help="mesh shape, comma-separated (default 2,4)")
+    p.add_argument("--axes", default="data,model",
+                   help="mesh axis names, comma-separated")
+    p.add_argument("--out", default=None,
+                   help="rolling session save path (.json or .npz)")
+    p.add_argument("--report-json", default=None,
+                   help="rolling JSON report path (first trace)")
+    p.add_argument("--report-html", default=None,
+                   help="rolling HTML report path (first trace)")
+    p.add_argument("--summary", default=None,
+                   help="rolling machine summary JSON (aggregates + "
+                        "findings)")
+    p.add_argument("--settle", type=float, default=0.25,
+                   help="seconds a file's size+mtime must hold still "
+                        "before it is ingested (default 0.25)")
+    p.add_argument("--interval", type=float, default=1.0,
+                   help="seconds between polls (default 1.0)")
+    p.add_argument("--once", action="store_true",
+                   help="ingest until the directory is quiescent, then "
+                        "exit (CI/testing mode)")
+    p.add_argument("--fail-on", choices=("critical", "warn", "info", "never"),
+                   default="never",
+                   help="print alerts and exit 1 when any finding reaches "
+                        "this severity (default: never)")
+    p.add_argument("--shards", type=int, default=None,
+                   help="parse shards per ingested file (default: auto)")
+    p.add_argument("--max-rounds", type=int, default=None,
+                   help="stop after this many polls (default: unbounded)")
+    p.add_argument("--quiet", action="store_true",
+                   help="suppress per-round progress lines")
 
     p = sub.add_parser("show", help="per-trace summaries of a saved session")
     p.add_argument("path")
@@ -468,14 +575,47 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                   file=sys.stderr)
             return 2
         mesh = MeshSpec(shape, axes)
-        sess = TraceSession.from_hlo(
-            os.path.splitext(os.path.basename(args.out))[0],
-            args.files, mesh, max_workers=args.workers, shards=args.shards)
+        try:
+            sess = TraceSession.from_hlo(
+                os.path.splitext(os.path.basename(args.out))[0],
+                args.files, mesh, max_workers=args.workers,
+                shards=args.shards)
+        except FileNotFoundError as e:
+            print(f"error: no such file: {e.filename}", file=sys.stderr)
+            return 2
+        except IngestError as e:
+            print(f"error: {e}", file=sys.stderr)
+            return 2
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         path = sess.save(args.out)
         print(f"session '{sess.name}': ingested {len(sess)} traces -> {path}")
         _print_totals(sess)
         return 0
+
+    if args.cmd == "watch":
+        from repro.core.watch import WatchConfig, WatchDaemon
+        shape = tuple(int(x) for x in args.mesh.split(","))
+        axes = tuple(args.axes.split(","))
+        if len(shape) != len(axes):
+            print("error: --mesh and --axes must have the same rank",
+                  file=sys.stderr)
+            return 2
+        if not os.path.isdir(args.root):
+            print(f"error: no such directory: {args.root}", file=sys.stderr)
+            return 2
+        for out in (args.out, args.report_json, args.report_html,
+                    args.summary):
+            if out:
+                os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        cfg = WatchConfig(
+            root=args.root, mesh=MeshSpec(shape, axes),
+            pattern=args.pattern, out=args.out,
+            report_json=args.report_json, report_html=args.report_html,
+            summary=args.summary, settle_s=args.settle,
+            interval_s=args.interval, once=args.once,
+            fail_on=args.fail_on, shards=args.shards,
+            max_rounds=args.max_rounds, quiet=args.quiet)
+        return WatchDaemon(cfg).run()
 
     if args.cmd == "lint":
         from repro.core import commcheck
@@ -556,18 +696,17 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             return 2
         if args.out:
             os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-            fp = open(args.out, "w")
-        else:
-            fp = sys.stdout
-        try:
-            sess.report(label, fmt=args.format, fp=fp,
-                        stream=args.stream, chunk_sites=args.chunk_sites)
-        finally:
-            if args.out:
-                fp.close()
-        if args.out:
+            # atomic: a concurrent reader (watch daemon consumers, CI
+            # artifact collection) never sees a half-written report
+            with atomic_open(args.out, "w") as fp:
+                sess.report(label, fmt=args.format, fp=fp,
+                            stream=args.stream,
+                            chunk_sites=args.chunk_sites)
             print(f"wrote {args.format} report -> {args.out} "
                   f"({os.path.getsize(args.out)//1024} KB)")
+        else:
+            sess.report(label, fmt=args.format, fp=sys.stdout,
+                        stream=args.stream, chunk_sites=args.chunk_sites)
     return 0
 
 

@@ -54,14 +54,38 @@ _CAT_COLS: Tuple[str, ...] = (
 )
 
 
+def _grow(buf: Optional[np.ndarray], cur: np.ndarray,
+          add: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Append `add` after logical column `cur`, reusing the amortized
+    capacity buffer `buf` while `cur` is still a live view of it.
+
+    Returns `(buf, view)` with `view = buf[:len(cur) + len(add)]`.  A
+    column that was replaced wholesale since the last append (e.g.
+    `annotate_store` swapping in computed `est_time_s`) no longer aliases
+    `buf`, so a fresh buffer is seeded from the current values; doubling
+    growth keeps N appends at O(total rows) amortized copies.
+    """
+    n, k = len(cur), len(add)
+    if buf is None or cur.base is not buf or len(buf) < n + k \
+            or buf.dtype != cur.dtype:
+        cap = 1 << max(n + k, 4).bit_length()
+        nbuf = np.empty(cap, dtype=cur.dtype)
+        nbuf[:n] = cur
+        buf = nbuf
+    buf[n:n + k] = add
+    return buf, buf[:n + k]
+
+
 class Categorical:
     """An interned string column: int32 codes into a first-seen vocab."""
 
-    __slots__ = ("codes", "vocab")
+    __slots__ = ("codes", "vocab", "_index", "_buf")
 
     def __init__(self, codes: np.ndarray, vocab: List[str]):
         self.codes = np.asarray(codes, dtype=np.int32)
         self.vocab = list(vocab)
+        self._index: Optional[Dict[str, int]] = None
+        self._buf: Optional[np.ndarray] = None
 
     @classmethod
     def from_values(cls, values: Sequence[str]) -> "Categorical":
@@ -115,6 +139,25 @@ class Categorical:
         codes = remap[self.codes] if len(table) else \
             np.empty(0, dtype=np.int32)
         return Categorical(codes, merged)
+
+    def extend(self, other: "Categorical") -> None:
+        """In-place append of `other`'s rows, interning its vocab
+        first-seen into ours — the streaming equivalent of the
+        `build_remap` union in `TraceStore.merge`, with the vocab index
+        cached across calls and codes kept in an amortized buffer."""
+        index = self._index
+        if index is None or len(index) != len(self.vocab):
+            index = self._index = {v: i for i, v in enumerate(self.vocab)}
+        remap = np.empty(len(other.vocab), dtype=np.int32)
+        for i, v in enumerate(other.vocab):
+            j = index.get(v)
+            if j is None:
+                j = index[v] = len(self.vocab)
+                self.vocab.append(v)
+            remap[i] = j
+        add = remap[other.codes] if len(other.codes) \
+            else np.empty(0, dtype=np.int32)
+        self._buf, self.codes = _grow(self._buf, self.codes, add)
 
 
 def _intern(index: Dict, key, table: List, value_fn) -> int:
@@ -182,6 +225,10 @@ class TraceStore:
         self._rg_rows: Optional[List[List[List[int]]]] = None
         self._stp_rows: Optional[List] = None
         self._axes_rows: Optional[List[Tuple[str, ...]]] = None
+        # append-mode state: amortized column buffers + cached payload
+        # table indices (value-keyed), see `append`
+        self._bufs: Dict[str, np.ndarray] = {}
+        self._tbl_idx: Dict[str, Dict] = {}
 
     # ---- construction ------------------------------------------------------
 
@@ -332,6 +379,82 @@ class TraceStore:
                    stp_tables=stp_tables, stp_code=stp_code,
                    axes_tables=axes_tables, axes_code=axes_code)
 
+    def append(self, other: "TraceStore") -> "TraceStore":
+        """In-place streaming variant of `merge`: extend self with `other`.
+
+        `s = TraceStore.empty()` followed by `s.append(c)` per chunk
+        leaves `s` `identical` to `TraceStore.merge(chunks)` — and
+        therefore, when the chunks are `split_hlo_module` parses, to the
+        batch `parse_hlo_store` of the concatenated input (pinned by
+        tests/test_append.py and `bench_overhead --append-only`).
+        Interning state (categorical vocab indices, payload-table value
+        indices) is cached between calls and every numeric/code column
+        lives in a doubling capacity buffer, so N appends cost O(total
+        rows) amortized — this is what keeps the watch daemon's rolling
+        store fresh without per-poll recomputation.
+
+        Returns `self`.  `other` is unmodified; its payload tables are
+        adopted by reference, exactly as `merge` shares them.
+        """
+        if other is self:
+            raise ValueError("cannot append a TraceStore to itself")
+        bufs = self._bufs
+        for col, _dt in _NUM_COLS:
+            bufs[col], view = _grow(bufs.get(col), getattr(self, col),
+                                    getattr(other, col))
+            setattr(self, col, view)
+        for col in _CAT_COLS:
+            getattr(self, col).extend(getattr(other, col))
+
+        def extend_tables(name, tables, other_tables, key_fn):
+            idx = self._tbl_idx.get(name)
+            if idx is None or len(idx) != len(tables):
+                idx = self._tbl_idx[name] = {key_fn(t): i
+                                             for i, t in enumerate(tables)}
+            m = np.empty(len(other_tables), dtype=np.int32)
+            for i, t in enumerate(other_tables):
+                key = key_fn(t)
+                j = idx.get(key)
+                if j is None:
+                    j = idx[key] = len(tables)
+                    tables.append(t)
+                m[i] = j
+            return m
+
+        g_map = extend_tables(
+            "group", self.group_tables, other.group_tables,
+            lambda t: tuple(tuple(int(x) for x in g) for g in t))
+        add = g_map[other.group_code] if len(other.group_code) \
+            else np.empty(0, dtype=np.int32)
+        bufs["group_code"], self.group_code = _grow(
+            bufs.get("group_code"), self.group_code, add)
+
+        s_map = extend_tables(
+            "stp", self.stp_tables, other.stp_tables,
+            lambda t: tuple((int(a), int(b)) for a, b in t))
+        c = other.stp_code
+        if not len(c):
+            add = np.empty(0, dtype=np.int32)
+        elif len(s_map):
+            add = np.where(c >= 0, s_map[np.clip(c, 0, None)], np.int32(-1))
+        else:
+            add = c
+        bufs["stp_code"], self.stp_code = _grow(
+            bufs.get("stp_code"), self.stp_code, add)
+
+        a_map = extend_tables("axes", self.axes_tables, other.axes_tables,
+                              lambda t: tuple(t))
+        add = a_map[other.axes_code] if len(other.axes_code) \
+            else np.empty(0, dtype=np.int32)
+        bufs["axes_code"], self.axes_code = _grow(
+            bufs.get("axes_code"), self.axes_code, add)
+
+        self.names.extend(other.names)
+        self.n += other.n
+        self._edges = self._gexp = None
+        self._rg_rows = self._stp_rows = self._axes_rows = None
+        return self
+
     def identical(self, other: "TraceStore") -> bool:
         """Field-for-field equality, codes and vocabs included.
 
@@ -395,6 +518,9 @@ class TraceStore:
         self.axes_tables = axes_tables
         self.axes_code = np.asarray(axes_code, dtype=np.int32)
         self._axes_rows = None
+        # a same-length replacement would fool append's len-based
+        # staleness check on the cached value index — drop it outright
+        self._tbl_idx.pop("axes", None)
 
     # ---- row views ---------------------------------------------------------
 
@@ -857,3 +983,45 @@ def union_rollup(stores: Sequence[TraceStore], by: str
         out[:, remap[off:off + k], t] = mat
         off += k
     return union, out
+
+
+class IncrementalRollup:
+    """Streaming sibling of `union_rollup`: fold per-chunk rollups into
+    one (labels, matrix) accumulator without keeping the chunks.
+
+    `update(store)` rolls the chunk up once and scatter-adds its metric
+    columns into a union-vocabulary `(4, n_labels)` matrix, interning
+    labels first-seen across chunks.  State is O(unique labels), not
+    O(rows) — how the watch daemon keeps Table II aggregates fresh per
+    poll without re-rolling the whole rolling store.
+    """
+
+    def __init__(self, by: str):
+        self.by = by
+        self.labels: List[str] = []
+        self._index: Dict[str, int] = {}
+        self.matrix = np.zeros((4, 0))
+
+    def update(self, store: TraceStore) -> None:
+        labels, mat = store.rollup(self.by)
+        if not labels:
+            return
+        cols = np.empty(len(labels), dtype=np.int64)
+        for i, lbl in enumerate(labels):
+            j = self._index.get(lbl)
+            if j is None:
+                j = self._index[lbl] = len(self.labels)
+                self.labels.append(lbl)
+            cols[i] = j
+        if len(self.labels) > self.matrix.shape[1]:
+            grown = np.zeros((4, len(self.labels)))
+            grown[:, :self.matrix.shape[1]] = self.matrix
+            self.matrix = grown
+        # chunk labels are unique, so fancy-index += is a safe scatter
+        self.matrix[:, cols] += mat
+
+    def as_dict(self) -> Dict[str, Dict[str, float]]:
+        m = self.matrix
+        return {lbl: {"bytes": float(m[0, i]), "wire_bytes": float(m[1, i]),
+                      "count": float(m[2, i]), "time_s": float(m[3, i])}
+                for i, lbl in enumerate(self.labels)}

@@ -9,7 +9,8 @@ a compiled-HLO trace exercises.
 """
 from __future__ import annotations
 
-from typing import Optional, Sequence, Tuple
+import os
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -349,3 +350,29 @@ def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
         "",
     ]
     return "\n".join(lines)
+
+
+def write_hlo_dump(root: str, n_files: int = 3, sites_per_file: int = 200,
+                   seed: int = 0, prefix: str = "module", start: int = 0,
+                   n_computations: int = 1) -> List[str]:
+    """Materialize a compiler-dump-shaped directory of synthetic modules.
+
+    Writes `n_files` `synthetic_hlo` modules (seeds `seed+start ..`) as
+    `{prefix}_{i:04d}.txt` under `root` — the input shape the watch
+    daemon tails.  `start` offsets both the numbering and the seed, so a
+    second call extends an existing dump with *new* distinct modules
+    (the grows-mid-run scenario).  Each file lands via an atomic
+    replace, so a concurrently-polling watcher never sees a partial
+    module.  Returns the paths written, in order.
+    """
+    from repro.core.persist import atomic_open
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for i in range(start, start + n_files):
+        text = synthetic_hlo(n_sites=sites_per_file, seed=seed + i,
+                             n_computations=n_computations)
+        path = os.path.join(root, f"{prefix}_{i:04d}.txt")
+        with atomic_open(path, "w") as f:
+            f.write(text)
+        paths.append(path)
+    return paths

@@ -1,0 +1,297 @@
+"""Live profiling — tail an HLO-dump directory, ingest deltas, keep
+rolling aggregates fresh.
+
+The batch workflow (dump the module, `session ingest`, `session report`)
+answers "what did that run do?".  This module answers the live question
+— "what is the run doing *now*?" — the way the paper's daemon mode does:
+a poller watches the directory a compiler dumps modules into, ingests
+each file once it has settled, and folds it into streaming state:
+
+  * a rolling `TraceStore` grown in place with `TraceStore.append`,
+  * `IncrementalRollup`s for the Table II traffic-class aggregates,
+  * `detect.DetectorState` (dynamic detectors) sufficient statistics,
+  * per-file `commcheck` findings (channel ids are *module*-scoped, so
+    the static analyzer runs per dump file — folding all files into one
+    `CommcheckState` would invent cross-module channel collisions; that
+    streaming state is for chunks of a single module),
+
+so every poll re-renders fresh reports in O(delta) work and O(unique
+keys) memory, never re-parsing old files.  Outputs (session save,
+report JSON/HTML, summary JSON) are all written through
+`persist.atomic_open`, so the consumers the daemon exists for — a
+browser auto-reloading the HTML, CI collecting artifacts mid-run —
+never observe a torn file.
+
+A file is re-ingested when its (size, mtime) signature changes; since
+streaming state cannot *subtract* a stale contribution, a changed file
+triggers a rebuild from the retained per-file traces (rare; new files
+are the hot path and stay incremental).
+
+`run(once=True)` ingests until the directory is quiescent and exits —
+the CI/testing mode; the equivalence contract is that its report output
+is byte-identical to `session ingest` + `session report` over the final
+directory contents.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import commcheck, detect
+from repro.core.events import HloOpStats, Trace
+from repro.core.persist import atomic_open
+from repro.core.store import IncrementalRollup, TraceStore
+from repro.core.topology import Hardware, MeshSpec, V5E
+
+Sig = Tuple[int, float]     # (size, mtime) file signature
+
+
+class DirWatcher:
+    """Poll-based new/changed-file detection over one dump directory.
+
+    A file is *ready* when its (size, mtime) signature is unchanged
+    across two consecutive polls AND its mtime is at least `settle_s`
+    old — a writer mid-stream (a compiler still dumping the module)
+    fails both tests, so partially-written files are never handed to
+    the parser.  A previously-ingested path whose signature changes
+    later becomes ready again (changed-file re-ingest).
+    """
+
+    def __init__(self, root: str, pattern: str = "*.txt",
+                 settle_s: float = 0.25):
+        self.root = root
+        self.pattern = pattern
+        self.settle_s = settle_s
+        self._last: Dict[str, Sig] = {}
+        self._ingested: Dict[str, Sig] = {}
+
+    def _scan(self) -> Dict[str, Sig]:
+        sigs: Dict[str, Sig] = {}
+        for path in sorted(glob.glob(os.path.join(self.root, self.pattern))):
+            try:
+                st = os.stat(path)
+            except OSError:
+                continue    # deleted between glob and stat
+            sigs[path] = (int(st.st_size), float(st.st_mtime))
+        return sigs
+
+    def poll(self, now: Optional[float] = None
+             ) -> Tuple[List[str], int]:
+        """One poll: -> (paths ready to ingest, count still pending).
+
+        Pending counts files that are present but not yet stable —
+        first-seen this poll, signature still moving, or settling.
+        """
+        if now is None:
+            now = time.time()
+        sigs = self._scan()
+        ready: List[str] = []
+        pending = 0
+        for path, sig in sigs.items():
+            if self._ingested.get(path) == sig:
+                continue
+            if self._last.get(path) == sig and now - sig[1] >= self.settle_s:
+                ready.append(path)
+            else:
+                pending += 1
+        self._last = sigs
+        return ready, pending
+
+    def mark_ingested(self, path: str) -> None:
+        sig = self._last.get(path)
+        if sig is not None:
+            self._ingested[path] = sig
+
+
+@dataclasses.dataclass
+class WatchConfig:
+    root: str
+    mesh: MeshSpec
+    pattern: str = "*.txt"
+    hw: Hardware = V5E
+    out: Optional[str] = None           # rolling session save (.json/.npz)
+    report_json: Optional[str] = None
+    report_html: Optional[str] = None
+    summary: Optional[str] = None
+    settle_s: float = 0.25
+    interval_s: float = 1.0
+    once: bool = False
+    fail_on: str = "never"
+    shards: Optional[int] = None
+    max_rounds: Optional[int] = None
+    expected_axes: Optional[Dict[str, str]] = None
+    quiet: bool = False
+
+
+class WatchDaemon:
+    """The streaming-ingest loop behind `session watch`.
+
+    Drives a `DirWatcher`, parses each ready file through the same
+    per-file pipeline batch ingest uses (`tracer.trace_from_hlo`), and
+    folds the resulting trace into the rolling aggregates.  `poll_once`
+    is the unit tests drive directly; `run` wraps it in the sleep loop
+    with `--once` quiescence detection.
+    """
+
+    def __init__(self, cfg: WatchConfig):
+        self.cfg = cfg
+        self.watcher = DirWatcher(cfg.root, cfg.pattern, cfg.settle_s)
+        self._traces: Dict[str, Trace] = {}     # path -> per-file trace
+        self._lint: Dict[str, List[detect.Finding]] = {}    # path -> findings
+        self.rounds = 0
+        self._reset_rolling()
+
+    # -- streaming state -----------------------------------------------------
+
+    def _reset_rolling(self) -> None:
+        self.rolling = TraceStore.empty()
+        self.rollups = {"kind_link": IncrementalRollup("kind_link"),
+                        "semantic": IncrementalRollup("semantic")}
+        self.detector = detect.DetectorState(
+            expected_axes=self.cfg.expected_axes, hw=self.cfg.hw)
+        self.op_stats = HloOpStats()
+
+    def _fold(self, trace: Trace) -> None:
+        self.rolling.append(trace.store)
+        for roll in self.rollups.values():
+            roll.update(trace.store)
+        self.detector.update(trace)
+        self.op_stats = HloOpStats.merged([self.op_stats, trace.op_stats])
+
+    def _rebuild(self) -> None:
+        # streaming state cannot subtract a stale file's contribution;
+        # re-fold the retained per-file traces (no re-parse)
+        self._reset_rolling()
+        for path in sorted(self._traces):
+            self._fold(self._traces[path])
+
+    def ingest(self, path: str) -> Trace:
+        from repro.core.tracer import trace_from_hlo
+        with open(path) as f:
+            text = f.read()
+        label = os.path.splitext(os.path.basename(path))[0]
+        changed = path in self._traces
+        trace = trace_from_hlo(text, self.cfg.mesh, label=label,
+                               hw=self.cfg.hw, shards=self.cfg.shards)
+        self._traces[path] = trace
+        # static analysis is per module: one CommcheckState per file,
+        # findings cached until the file itself changes
+        st = commcheck.CommcheckState(self.cfg.mesh)
+        st.update(trace.store)
+        self._lint[path] = st.findings()
+        if changed:
+            self._rebuild()
+        else:
+            self._fold(trace)
+        return trace
+
+    def poll_once(self, now: Optional[float] = None) -> Tuple[List[str], int]:
+        """One watcher poll + ingest of everything ready."""
+        ready, pending = self.watcher.poll(now)
+        for path in ready:
+            self.ingest(path)
+            self.watcher.mark_ingested(path)
+        self.rounds += 1
+        return ready, pending
+
+    # -- derived views -------------------------------------------------------
+
+    def session(self):
+        from repro.core.session import TraceSession
+        name = os.path.basename(os.path.abspath(self.cfg.root)) or "watch"
+        return TraceSession(name,
+                            [self._traces[p] for p in sorted(self._traces)])
+
+    def findings(self) -> List[detect.Finding]:
+        """Static (per-module commcheck) + dynamic (detector) findings."""
+        out: List[detect.Finding] = []
+        for path in sorted(self._lint):
+            out.extend(self._lint[path])
+        out.extend(self.detector.findings())
+        return detect.rank_findings(out)
+
+    def alerts(self) -> List[detect.Finding]:
+        if self.cfg.fail_on == "never":
+            return []
+        rank = detect.SEVERITY_RANK
+        return [f for f in self.findings()
+                if rank.get(f.severity, 99) <= rank[self.cfg.fail_on]]
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "root": self.cfg.root,
+            "files": len(self._traces),
+            "sites": int(self.rolling.n),
+            "rounds": self.rounds,
+            "by_kind_link": self.rollups["kind_link"].as_dict(),
+            "by_semantic": self.rollups["semantic"].as_dict(),
+            "findings": [f.to_dict() for f in self.findings()],
+        }
+
+    # -- output --------------------------------------------------------------
+
+    def emit(self) -> None:
+        """Re-write every configured artifact (all atomic replaces)."""
+        cfg = self.cfg
+        sess = self.session() if (cfg.out or cfg.report_json
+                                  or cfg.report_html) else None
+        if cfg.out:
+            sess.save(cfg.out)
+        for path, fmt in ((cfg.report_json, "json"),
+                          (cfg.report_html, "html")):
+            if path and len(sess):
+                with atomic_open(path, "w") as fp:
+                    sess.report(fmt=fmt, fp=fp)
+        if cfg.summary:
+            with atomic_open(cfg.summary, "w") as fp:
+                json.dump(self.summary(), fp, indent=1)
+                fp.write("\n")
+
+    def _log(self, msg: str) -> None:
+        if not self.cfg.quiet:
+            print(msg, flush=True)
+
+    # -- the loop ------------------------------------------------------------
+
+    def run(self) -> int:
+        """Poll until interrupted (daemon) or quiescent (`once`).
+
+        `once` exits after a poll that found nothing ready *and*
+        nothing pending, with at least two polls total (a pre-existing
+        file needs two polls to prove stability).  Returns 1 when any
+        finding reached `fail_on` severity, else 0.
+        """
+        cfg = self.cfg
+        emitted = False
+        try:
+            while True:
+                ready, pending = self.poll_once()
+                if ready or not emitted:
+                    self.emit()
+                    emitted = True
+                    self._log(f"[watch] round {self.rounds}: "
+                              f"+{len(ready)} file(s), "
+                              f"{len(self._traces)} total, "
+                              f"{self.rolling.n} sites, "
+                              f"{pending} pending")
+                if cfg.once and not ready and not pending \
+                        and self.rounds >= 2:
+                    break
+                if cfg.max_rounds is not None \
+                        and self.rounds >= cfg.max_rounds:
+                    break
+                time.sleep(cfg.interval_s)
+        except KeyboardInterrupt:
+            self._log("[watch] interrupted")
+        self.emit()
+        alerts = self.alerts()
+        for f in alerts:
+            where = f" @ {f.site}" if f.site else ""
+            print(f"[watch] ALERT [{f.severity}] {f.detector}{where}: "
+                  f"{f.message}", file=sys.stderr)
+        return 1 if alerts else 0

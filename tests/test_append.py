@@ -1,0 +1,217 @@
+"""Append-mode TraceStore: incremental growth == batch, byte-for-byte.
+
+The streaming-ingest contract (PR invariant): a store grown by N
+`TraceStore.append` calls over the chunks of a module is *identical*
+(`TraceStore.identical` — codes, vocab order, payload tables, caches
+rebuilt on demand) to one batch `parse_hlo_store` over the whole text,
+exactly as PR 5 pinned for `merge`.  Plus the streaming aggregate
+state: `IncrementalRollup`, `detect.DetectorState`, and
+`commcheck.CommcheckState` fed per-chunk must reproduce their batch
+siblings over the union.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core import attribution, commcheck, costmodel, detect, hlo_parser
+from repro.core.store import IncrementalRollup, TraceStore, union_rollup
+from repro.core.synth import inject_comm_bugs, synthetic_hlo, synthetic_trace
+from repro.core.topology import MeshSpec, V5E
+from repro.core.tracer import trace_from_hlo
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def chunk_stores(seed: int, n_sites: int = 400, n_chunks: int = 4,
+                 n_computations: int = 6):
+    text = synthetic_hlo(n_sites=n_sites, seed=seed,
+                         n_computations=n_computations)
+    chunks, ctx = hlo_parser.split_hlo_module(text, n_chunks)
+    stores = [hlo_parser.parse_hlo_store(c, MESH.num_devices,
+                                         shard_ctx=ctx)[0]
+              for c in chunks]
+    batch, _ = hlo_parser.parse_hlo_store(text, MESH.num_devices)
+    return stores, batch
+
+
+# -- the core byte-identity invariant ----------------------------------------
+
+@given(seed=st.integers(0, 1000))
+@settings(max_examples=6, deadline=None)
+def test_append_identical_to_batch_parse(seed):
+    stores, batch = chunk_stores(seed)
+    acc = TraceStore.empty()
+    for s in stores:
+        assert acc.append(s) is acc
+    assert acc.identical(batch)
+    # appended store keeps working as a store: caches rebuilt on demand
+    assert acc.rows() == batch.rows()
+
+
+def test_append_matches_merge_any_order():
+    stores, _ = chunk_stores(11)
+    order = [2, 0, 3, 1]     # out-of-order file arrival
+    acc = TraceStore.empty()
+    for i in order:
+        acc.append(stores[i])
+    assert acc.identical(TraceStore.merge([stores[i] for i in order]))
+
+
+def test_append_empty_is_noop_both_ways():
+    stores, _ = chunk_stores(3, n_sites=120, n_chunks=2)
+    acc = TraceStore.empty()
+    acc.append(TraceStore.empty())
+    assert acc.n == 0
+    acc.append(stores[0])
+    before = acc.to_dict()
+    acc.append(TraceStore.empty())
+    assert acc.identical(stores[0])
+    assert acc.to_dict() == before
+
+
+def test_append_single_chunk_identical():
+    stores, _ = chunk_stores(5, n_sites=100, n_chunks=1, n_computations=1)
+    acc = TraceStore.empty()
+    acc.append(stores[0])
+    assert acc.identical(stores[0])
+
+
+def test_append_self_raises():
+    tr = synthetic_trace("s", MESH, n_sites=30, seed=0)
+    with pytest.raises(ValueError):
+        tr.store.append(tr.store)
+
+
+def test_append_annotated_chunks_matches_merge():
+    # annotate_store orders derived axes tables per store, so annotated
+    # appends are pinned against merge of the same annotated chunks (the
+    # raw-parse invariant above is where batch byte-identity lives)
+    stores, _ = chunk_stores(17)
+    for s in stores:
+        costmodel.annotate_store(s, MESH, V5E)
+        attribution.attribute_store(s)
+    acc = TraceStore.empty()
+    for s in stores:
+        acc.append(s)
+    assert acc.identical(TraceStore.merge(stores))
+    ref = TraceStore.merge(stores)
+    assert acc.by_kind_and_link() == ref.by_kind_and_link()
+
+
+def test_append_after_wholesale_column_replacement():
+    # annotate_store replaces numeric columns wholesale (est_time_s etc.
+    # are fresh arrays, not views of the append buffers); the next append
+    # must re-adopt them instead of scribbling over stale buffers
+    stores, _ = chunk_stores(23, n_sites=200, n_chunks=3)
+    acc = TraceStore.empty()
+    acc.append(stores[0])
+    costmodel.annotate_store(acc, MESH, V5E)
+    t0 = acc.est_time_s.copy()
+    acc.append(stores[1])
+    np.testing.assert_array_equal(acc.est_time_s[:len(t0)], t0)
+    assert acc.n == stores[0].n + stores[1].n
+
+
+# -- persistence of appended stores ------------------------------------------
+
+def test_appended_store_v2_roundtrip(tmp_path):
+    stores, batch = chunk_stores(29, n_sites=150, n_chunks=3)
+    acc = TraceStore.empty()
+    for s in stores:
+        acc.append(s)
+    d = json.loads(json.dumps(acc.to_dict()))
+    assert d["version"] == 2
+    assert TraceStore.from_dict(d).identical(batch)
+    arrs = dict(acc.npz_arrays(prefix="a_"))
+    path = tmp_path / "acc.npz"
+    np.savez_compressed(path, **arrs)
+    with np.load(path) as loaded:
+        back = TraceStore.from_npz_arrays(loaded, prefix="a_")
+    assert back.identical(batch)
+
+
+def test_appended_store_v1_dict_roundtrip():
+    a = synthetic_trace("a", MESH, n_sites=40, seed=1).store
+    b = synthetic_trace("b", MESH, n_sites=40, seed=2).store
+    acc = TraceStore.empty()
+    acc.append(a)
+    acc.append(b)
+    d = acc.to_dict()
+    v1 = {"version": 1, "n": d["n"], "num": d["num"],
+          "cat": {k: v for k, v in d["cat"].items() if k != "op_name"},
+          "names": acc.names, "op_names": acc.op_names,
+          "axes": [list(x) for x in acc.axes],
+          "replica_groups": acc.replica_groups,
+          "source_target_pairs": [
+              None if p is None else [list(pair) for pair in p]
+              for p in acc.source_target_pairs]}
+    assert TraceStore.from_dict(v1).rows() == acc.rows()
+
+
+# -- streaming aggregates == batch over the union ----------------------------
+
+def test_incremental_rollup_matches_union_and_batch():
+    stores, batch = chunk_stores(31)
+    for by in ("kind_link", "semantic", "site"):
+        inc = IncrementalRollup(by)
+        for s in stores:
+            inc.update(s)
+        labels, mat = union_rollup(stores, by)
+        assert inc.labels == labels
+        np.testing.assert_allclose(inc.matrix, mat.sum(axis=2), rtol=1e-12)
+        blabels, bmat = batch.rollup(by)
+        assert inc.labels == blabels
+        np.testing.assert_allclose(inc.matrix, bmat, rtol=1e-12)
+
+
+def finding_key(f):
+    return (f.detector, f.severity, f.site, f.message)
+
+
+def test_detector_state_matches_run_all():
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    full = synthetic_trace("full", mesh, n_sites=3000, seed=4)
+    expected = {"grad_sync": "data"}
+    batch = detect.run_all(full, expected_axes=expected)
+    st_ = detect.DetectorState(expected_axes=expected)
+    evs = full.events
+    step = (len(evs) + 4) // 5
+    from repro.core.events import Trace
+    for i in range(0, len(evs), step):
+        st_.update(Trace(label=f"c{i}", mesh_shape=mesh.shape,
+                         mesh_axes=mesh.axes, num_devices=mesh.num_devices,
+                         events=evs[i:i + step]))
+    inc = st_.findings()
+    assert sorted(map(finding_key, inc)) == sorted(map(finding_key, batch))
+
+
+@given(seed=st.integers(0, 200))
+@settings(max_examples=6, deadline=None)
+def test_commcheck_state_matches_batch_on_buggy_traces(seed):
+    trace, _labels = inject_comm_bugs(MESH, n_sites=120, seed=seed)
+    batch = commcheck.check_trace(trace, MESH)
+    st_ = commcheck.CommcheckState(MESH)
+    evs = trace.events
+    step = (len(evs) + 4) // 5
+    for i in range(0, len(evs), step):
+        st_.update(TraceStore.from_events(evs[i:i + step]))
+    inc = st_.findings()
+    assert list(map(finding_key, inc)) == list(map(finding_key, batch))
+
+
+def test_commcheck_state_clean_chunked_hlo_quiet():
+    text = synthetic_hlo(n_sites=400, seed=9, n_computations=5)
+    full = trace_from_hlo(text, MESH, label="f", shards=1)
+    batch = commcheck.check_trace(full, MESH)
+    chunks, ctx = hlo_parser.split_hlo_module(text, 3)
+    st_ = commcheck.CommcheckState(MESH)
+    for c in chunks:
+        store, _ = hlo_parser.parse_hlo_store(c, MESH.num_devices,
+                                              shard_ctx=ctx)
+        costmodel.annotate_store(store, MESH, V5E)
+        attribution.attribute_store(store)
+        st_.update(store)
+    assert list(map(finding_key, st_.findings())) \
+        == list(map(finding_key, batch))

@@ -240,3 +240,113 @@ def test_session_roundtrip_stores_identical(tmp_path, ext):
     for a, b in zip(sess, loaded):
         assert a.store.identical(b.store)
         assert a.total_est_time_s() == b.total_est_time_s()
+
+
+def test_save_load_extensionless_contract(tmp_path):
+    # save defaults an extensionless path to .json and returns the path
+    # actually written; load applies the same defaulting, so the caller
+    # can round-trip through either the returned path or the original
+    sess = TraceSession("ext", [rand_trace(0, 60)])
+    bare = str(tmp_path / "noext")
+    path = sess.save(bare)
+    assert path == bare + ".json"
+    import os
+    assert os.path.exists(path) and not os.path.exists(bare)
+    assert TraceSession.load(path).labels() == sess.labels()
+    assert TraceSession.load(bare).labels() == sess.labels()
+
+
+# -- atomic persistence: a failed save never destroys the previous file ------
+
+def test_atomic_open_failure_leaves_target_and_no_tmp(tmp_path):
+    from repro.core.persist import atomic_open
+    import os
+    target = tmp_path / "artifact.json"
+    target.write_text("previous complete artifact")
+    with pytest.raises(RuntimeError):
+        with atomic_open(str(target)) as f:
+            f.write("half-writ")
+            raise RuntimeError("writer died mid-emit")
+    assert target.read_text() == "previous complete artifact"
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+    with pytest.raises(ValueError):
+        with atomic_open(str(target), mode="r"):
+            pass
+
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_session_save_failure_preserves_previous_save(tmp_path, ext,
+                                                      monkeypatch):
+    import os
+    path = str(tmp_path / f"s.{ext}")
+    TraceSession("old", [rand_trace(0, 40)]).save(path)
+    before = open(path, "rb").read()
+    boom = RuntimeError("serializer died")
+    if ext == "json":
+        monkeypatch.setattr(json, "dump",
+                            lambda *a, **k: (_ for _ in ()).throw(boom))
+    else:
+        monkeypatch.setattr(np, "savez_compressed",
+                            lambda *a, **k: (_ for _ in ()).throw(boom))
+    with pytest.raises(RuntimeError):
+        TraceSession("new", [rand_trace(1, 40)]).save(path)
+    assert open(path, "rb").read() == before
+    assert [p for p in os.listdir(tmp_path) if p.endswith(".tmp")] == []
+
+
+# -- from_hlo error policy: IngestError names the input, pool loss retries ---
+
+def test_from_hlo_ingest_error_names_offending_input():
+    from repro.core.session import IngestError
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    items = [("good", ""), ("bad", None)]       # None explodes in the parser
+    with pytest.raises(IngestError, match="bad"):
+        TraceSession.from_hlo("s", items, mesh, max_workers=1)
+
+
+def test_from_hlo_pool_path_wraps_per_file_errors(monkeypatch):
+    # a synchronous fake pool: exercises the pool-branch error wiring
+    # (probe, per-future IngestError) without paying spawn startup
+    import concurrent.futures as cf
+    from repro.core.session import IngestError
+
+    class FakeFuture:
+        def __init__(self, fn, *args):
+            self._fn, self._args = fn, args
+
+        def result(self, timeout=None):
+            return self._fn(*self._args)
+
+    class FakePool:
+        def __init__(self, *a, **k):
+            pass
+
+        def submit(self, fn, *args):
+            return FakeFuture(fn, *args)
+
+        def shutdown(self, *a, **k):
+            pass
+
+    monkeypatch.setattr(cf, "ProcessPoolExecutor", FakePool)
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    from repro.core.synth import synthetic_hlo
+    good = [(f"g{i}", synthetic_hlo(n_sites=30, seed=i)) for i in range(2)]
+    sess = TraceSession.from_hlo("s", good, mesh, max_workers=2)
+    assert sess.labels() == ["g0", "g1"]
+    with pytest.raises(IngestError, match="bad"):
+        TraceSession.from_hlo("s", good + [("bad", None)], mesh,
+                              max_workers=2)
+
+
+def test_from_hlo_pool_startup_failure_falls_back_serial(monkeypatch):
+    import concurrent.futures as cf
+
+    def no_pool(*a, **k):
+        raise OSError("spawn forbidden in this sandbox")
+
+    monkeypatch.setattr(cf, "ProcessPoolExecutor", no_pool)
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    from repro.core.synth import synthetic_hlo
+    items = [(f"g{i}", synthetic_hlo(n_sites=30, seed=i)) for i in range(2)]
+    sess = TraceSession.from_hlo("s", items, mesh, max_workers=2)
+    assert sess.labels() == ["g0", "g1"]    # ingested serially, not dropped

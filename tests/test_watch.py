@@ -1,0 +1,240 @@
+"""Watch daemon: dir tailing, incremental folds, batch-equivalent output.
+
+The live-profiling contract: `session watch --once` over a dump
+directory — including one that *grows mid-run* — must produce the same
+session/report a batch `session ingest` + `session report` over the
+final directory contents produces, while its rolling aggregates stay
+equal to full recomputation.
+"""
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core.session import TraceSession, _main
+from repro.core.synth import synthetic_hlo, write_hlo_dump
+from repro.core.topology import MeshSpec
+from repro.core.watch import DirWatcher, WatchConfig, WatchDaemon
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def mk_daemon(root, **kw):
+    kw.setdefault("settle_s", 0.0)
+    kw.setdefault("quiet", True)
+    return WatchDaemon(WatchConfig(root=str(root), mesh=MESH, **kw))
+
+
+def drain(daemon, max_polls=10):
+    """Poll until a round ingests nothing and nothing is pending."""
+    for _ in range(max_polls):
+        ready, pending = daemon.poll_once()
+        if not ready and not pending:
+            return
+    raise AssertionError("directory never became quiescent")
+
+
+def batch_session(root):
+    paths = sorted(str(p) for p in __import__("glob").glob(
+        os.path.join(str(root), "*.txt")))
+    return TraceSession.from_hlo(os.path.basename(str(root)), paths, MESH,
+                                 max_workers=1)
+
+
+# -- DirWatcher: stability + settle + re-ingest ------------------------------
+
+def test_watcher_needs_two_stable_polls(tmp_path):
+    w = DirWatcher(str(tmp_path), settle_s=0.0)
+    (tmp_path / "a.txt").write_text("x")
+    ready, pending = w.poll()
+    assert ready == [] and pending == 1        # first sighting: not ready
+    ready, pending = w.poll()
+    assert [os.path.basename(p) for p in ready] == ["a.txt"]
+    w.mark_ingested(ready[0])
+    assert w.poll() == ([], 0)                 # ingested: quiescent
+
+
+def test_watcher_holds_while_file_is_growing(tmp_path):
+    w = DirWatcher(str(tmp_path), settle_s=0.0)
+    p = tmp_path / "a.txt"
+    p.write_text("x")
+    w.poll()
+    p.write_text("xy")                         # signature moved between polls
+    ready, pending = w.poll()
+    assert ready == [] and pending == 1
+    ready, _ = w.poll()
+    assert len(ready) == 1
+
+
+def test_watcher_settle_delay_blocks_fresh_files(tmp_path):
+    w = DirWatcher(str(tmp_path), settle_s=3600.0)
+    (tmp_path / "a.txt").write_text("x")
+    w.poll()
+    ready, pending = w.poll()
+    assert ready == [] and pending == 1        # stable but too young
+
+
+def test_watcher_reingests_changed_files(tmp_path):
+    w = DirWatcher(str(tmp_path), settle_s=0.0)
+    p = tmp_path / "a.txt"
+    p.write_text("x")
+    w.poll()
+    ready, _ = w.poll()
+    w.mark_ingested(ready[0])
+    p.write_text("different content")      # new size => new signature
+    w.poll()
+    ready, _ = w.poll()
+    assert len(ready) == 1                     # changed after ingest: redo
+
+
+def test_watcher_respects_pattern(tmp_path):
+    w = DirWatcher(str(tmp_path), pattern="*.hlo", settle_s=0.0)
+    (tmp_path / "a.txt").write_text("x")
+    (tmp_path / "b.hlo").write_text("y")
+    w.poll()
+    ready, pending = w.poll()
+    assert [os.path.basename(p) for p in ready] == ["b.hlo"]
+    assert pending == 0
+
+
+# -- daemon: incremental ingest == batch over the final directory ------------
+
+def test_daemon_matches_batch_after_midrun_growth(tmp_path):
+    write_hlo_dump(str(tmp_path), n_files=2, sites_per_file=120, seed=3)
+    d = mk_daemon(tmp_path, fail_on="never")
+    drain(d)
+    assert len(d._traces) == 2
+    # the directory grows mid-run; the next polls pick the delta up
+    write_hlo_dump(str(tmp_path), n_files=1, sites_per_file=120, seed=3,
+                   start=2)
+    drain(d)
+    assert len(d._traces) == 3
+
+    ref = batch_session(tmp_path)
+    sess = d.session()
+    assert sess.labels() == ref.labels()
+    assert sess.report(fmt="json") == ref.report(fmt="json")
+    for a, b in zip(sess, ref):
+        assert a.store.identical(b.store)
+
+    # rolling aggregates == recomputation over the union
+    union = [t.store for t in ref]
+    total = sum(s.n for s in union)
+    assert d.rolling.n == total
+    batch_roll = {}
+    for t in ref:
+        for k, v in t.by_kind_and_link().items():
+            acc = batch_roll.setdefault(k, dict.fromkeys(v, 0.0))
+            for f in v:
+                acc[f] += v[f]
+    inc = d.rollups["kind_link"].as_dict()
+    assert set(inc) == set(batch_roll)
+    for k in inc:
+        for f in ("bytes", "wire_bytes", "count", "time_s"):
+            assert inc[k][f] == pytest.approx(batch_roll[k][f], rel=1e-9)
+
+
+def test_daemon_rebuilds_on_changed_file(tmp_path):
+    paths = write_hlo_dump(str(tmp_path), n_files=2, sites_per_file=80,
+                           seed=5)
+    d = mk_daemon(tmp_path)
+    drain(d)
+    n_before = d.rolling.n
+    # rewrite file 0 with a bigger module: stale contribution must vanish
+    with open(paths[0], "w") as f:
+        f.write(synthetic_hlo(n_sites=160, seed=99))    # new size/mtime
+    drain(d)
+    assert len(d._traces) == 2
+    ref = batch_session(tmp_path)
+    assert d.rolling.n == sum(t.store.n for t in ref) != n_before
+    assert d.session().report(fmt="json") == ref.report(fmt="json")
+
+
+def test_daemon_summary_and_emit_atomic(tmp_path):
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=2, sites_per_file=60, seed=1)
+    out = tmp_path / "out"
+    out.mkdir()
+    d = mk_daemon(root, out=str(out / "sess.json"),
+                  report_json=str(out / "report.json"),
+                  summary=str(out / "summary.json"))
+    drain(d)
+    d.emit()
+    import json
+    s = json.loads((out / "summary.json").read_text())
+    assert s["files"] == 2 and s["sites"] == d.rolling.n
+    assert set(s["by_kind_link"]) == set(d.rollups["kind_link"].as_dict())
+    loaded = TraceSession.load(str(out / "sess.json"))
+    assert loaded.labels() == d.session().labels()
+    assert (out / "report.json").read_text() \
+        == d.session().report(fmt="json") + "\n"
+    assert not [p for p in os.listdir(out) if p.endswith(".tmp")]
+
+
+# -- CLI: --once over a directory that grows mid-run -------------------------
+
+def test_watch_cli_once_with_midrun_writer(tmp_path, capsys):
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=2, sites_per_file=70, seed=11)
+    report = str(tmp_path / "rolling_report.json")
+
+    def late_writer():
+        time.sleep(0.15)
+        write_hlo_dump(str(root), n_files=1, sites_per_file=70, seed=11,
+                       start=2)
+
+    t = threading.Thread(target=late_writer)
+    t.start()
+    try:
+        # settle 0.4s > writer delay: the pre-existing files are still
+        # settling when the third lands, so quiescence cannot precede it
+        rc = _main(["watch", str(root), "--once", "--quiet",
+                    "--settle", "0.4", "--interval", "0.05",
+                    "--report-json", report])
+    finally:
+        t.join()
+    assert rc == 0
+    ref = batch_session(root)
+    assert len(ref) == 3
+    with open(report) as f:
+        assert f.read() == ref.report(fmt="json") + "\n"
+
+
+def test_watch_cli_fail_on_alerts(tmp_path, capsys):
+    root = tmp_path / "dump"
+    root.mkdir()
+    # two collectives of different kinds on one channel: a critical
+    # channel_collision the static analyzer must flag
+    (root / "bug.txt").write_text("\n".join([
+        "HloModule bug",
+        "",
+        "%add (a: f32[], b: f32[]) -> f32[] {",
+        "  %a = f32[] parameter(0)",
+        "  %b = f32[] parameter(1)",
+        "  ROOT %r = f32[] add(%a, %b)",
+        "}",
+        "",
+        "ENTRY %main (x: f32[8]) -> f32[8] {",
+        "  %x = f32[8] parameter(0)",
+        "  %ar = f32[8] all-reduce(%x), channel_id=1, "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, to_apply=%add",
+        "  %ag = f32[64] all-gather(%x), channel_id=1, "
+        "replica_groups={{0,1,2,3,4,5,6,7}}, dimensions={0}",
+        "  ROOT %out = f32[8] copy(%x)",
+        "}",
+        "",
+    ]))
+    rc = _main(["watch", str(root), "--once", "--quiet", "--settle", "0",
+                "--interval", "0.01", "--fail-on", "critical"])
+    captured = capsys.readouterr()
+    assert rc == 1
+    assert "channel_collision" in captured.err
+    # advisory mode: same directory, exit 0
+    assert _main(["watch", str(root), "--once", "--quiet", "--settle", "0",
+                  "--interval", "0.01"]) == 0
+
+
+def test_watch_cli_rejects_missing_dir(tmp_path, capsys):
+    assert _main(["watch", str(tmp_path / "nope"), "--once"]) == 2
+    assert "no such directory" in capsys.readouterr().err
