@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""CI chaos gate: corrupt-dump matrix through batch ingest and the watch
+daemon — controlled exit codes, no crashes, full provenance.
+
+Builds a dump directory holding one clean module plus every
+`synth.CORRUPT_MODES` fault injection, then drives the two fleet entry
+points over it as real subprocesses:
+
+  1. `session ingest --errors=salvage` must exit 3 (degraded, not
+     fatal), write the session, and account for every input in the
+     machine-readable ingest report — with the undecodable file
+     quarantined and the clean file byte-identical to a solo ingest.
+  2. `session watch --once --fail-on critical` must exit with a
+     controlled code (1 alerts / 3 degraded), quarantine the
+     undecodable file in its summary, and never crash.
+
+Run from the repo root:  python scripts/chaos_smoke.py
+"""
+import json
+import os
+import shutil
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(ROOT, "src")
+sys.path.insert(0, SRC)
+
+from repro.core.session import TraceSession            # noqa: E402
+from repro.core.synth import synthetic_hlo, write_corrupt_dump  # noqa: E402
+from repro.core.topology import MeshSpec               # noqa: E402
+from repro.core.tracer import trace_from_hlo           # noqa: E402
+
+WORK = os.path.join(ROOT, "results", "chaos_smoke")
+MESH = MeshSpec((2, 4), ("data", "model"))
+ENV = dict(os.environ, PYTHONPATH=SRC + os.pathsep
+           + os.environ.get("PYTHONPATH", ""))
+
+
+def run(args):
+    return subprocess.run([sys.executable, "-m", "repro.core.session",
+                           *args], env=ENV, capture_output=True, text=True)
+
+
+def fail(msg):
+    print(f"chaos_smoke: FAIL — {msg}", file=sys.stderr)
+    raise SystemExit(1)
+
+
+def main():
+    shutil.rmtree(WORK, ignore_errors=True)
+    dump = os.path.join(WORK, "dump")
+    os.makedirs(dump)
+    clean_text = synthetic_hlo(n_sites=200, seed=17)
+    with open(os.path.join(dump, "clean.txt"), "w") as f:
+        f.write(clean_text)
+    write_corrupt_dump(dump, seed=9)
+    files = sorted(os.path.join(dump, f) for f in os.listdir(dump))
+    print(f"chaos_smoke: {len(files)} inputs "
+          f"({[os.path.basename(p) for p in files]})")
+
+    # -- batch ingest: exit 3, session written, everything accounted for
+    out = os.path.join(WORK, "chaos.json")
+    r = run(["ingest", out, *files, "--workers", "1", "--errors", "salvage",
+             "--retries", "0", "--retry-backoff", "0", "--json"])
+    if r.returncode != 3:
+        fail(f"ingest --errors=salvage exited {r.returncode}, expected 3\n"
+             f"{r.stdout}\n{r.stderr}")
+    report = json.loads(r.stdout)
+    if [rec["source"] for rec in report["records"]] != files:
+        fail(f"ingest report does not cover every input: {report}")
+    statuses = {os.path.basename(rec["source"]): rec["status"]
+                for rec in report["records"]}
+    if statuses["clean.txt"] != "ok":
+        fail(f"clean module degraded: {statuses}")
+    if statuses["corrupt_binary.txt"] != "quarantined":
+        fail(f"undecodable module not quarantined: {statuses}")
+    for rec in report["records"]:
+        if rec["status"] != "ok" and not rec["error"]:
+            fail(f"degraded input with no recorded reason: {rec}")
+    sess = TraceSession.load(out)
+    solo = trace_from_hlo(clean_text, MESH, label="clean")
+    if not sess.get("clean").store.identical(solo.store):
+        fail("clean module not byte-identical through the chaos ingest")
+    print(f"chaos_smoke: ingest ok (exit 3, "
+          f"{sum(1 for s in statuses.values() if s != 'ok')} degraded, "
+          f"clean module byte-identical)")
+
+    # -- watch daemon: controlled exit, quarantine in the summary
+    summary = os.path.join(WORK, "summary.json")
+    ckpt = os.path.join(WORK, "watch.npz")
+    r = run(["watch", dump, "--once", "--quiet", "--settle", "0",
+             "--interval", "0.01", "--retry-backoff", "0",
+             "--fail-on", "critical", "--summary", summary,
+             "--checkpoint", ckpt])
+    if r.returncode not in (0, 1, 3):
+        fail(f"watch --once exited {r.returncode} (crash?)\n{r.stderr}")
+    with open(summary) as f:
+        summ = json.load(f)
+    quarantined = [os.path.basename(p)
+                   for p in summ["ingest"]["quarantined"]]
+    if "corrupt_binary.txt" not in quarantined:
+        fail(f"daemon summary missing the quarantined file: {summ['ingest']}")
+    recorded = {os.path.basename(rec["source"])
+                for rec in summ["ingest"]["records"]}
+    if recorded != {os.path.basename(p) for p in files}:
+        fail(f"daemon records incomplete: {sorted(recorded)}")
+    print(f"chaos_smoke: watch ok (exit {r.returncode}, "
+          f"quarantined={quarantined})")
+
+    # -- resume on the daemon's checkpoint: zero re-parses
+    r = run(["watch", dump, "--once", "--quiet", "--settle", "0",
+             "--interval", "0.01", "--retry-backoff", "0",
+             "--summary", summary, "--checkpoint", ckpt])
+    if r.returncode not in (0, 1, 3):
+        fail(f"watch resume exited {r.returncode}\n{r.stderr}")
+    with open(summary) as f:
+        summ = json.load(f)
+    if summ["ingest"]["parse_count"] != 0:
+        fail(f"resumed daemon re-parsed "
+             f"{summ['ingest']['parse_count']} file(s)")
+    print("chaos_smoke: resume ok (0 re-parses)")
+    print("chaos_smoke: PASS")
+
+
+if __name__ == "__main__":
+    main()

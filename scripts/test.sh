@@ -5,7 +5,8 @@
 #   TIER=smoke scripts/test.sh    # reproduce the CI job in one command:
 #                                 # analysis-layer tests, the ingest/render/
 #                                 # shard/append/persist smoke benches, a
-#                                 # `session watch --once` smoke, and the
+#                                 # `session watch --once` smoke, the chaos
+#                                 # gate (corrupt-dump matrix), and the
 #                                 # bench-trajectory gate (no jax compilation)
 set -u
 cd "$(dirname "$0")/.."
@@ -17,7 +18,7 @@ if [ "${TIER:-full}" = "smoke" ]; then
         tests/test_ingest.py tests/test_render.py tests/test_report.py \
         tests/test_session.py tests/test_detect.py tests/test_tracer.py \
         tests/test_shard.py tests/test_commcheck.py tests/test_append.py \
-        tests/test_watch.py \
+        tests/test_watch.py tests/test_chaos.py \
         "$@"
     rc=$?
     if [ "$rc" -ne 0 ]; then
@@ -35,6 +36,9 @@ sites_per_file=400, seed=0)" || exit $?
         --settle 0 --interval 0.05 --quiet \
         --summary results/watch_smoke/summary.json \
         --report-json results/watch_smoke/report.json || exit $?
+    # chaos gate: corrupt-dump matrix through ingest + the watch daemon —
+    # controlled exit codes, quarantine provenance, zero-re-parse resume
+    python scripts/chaos_smoke.py || exit $?
     python benchmarks/bench_overhead.py --ingest-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --render-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --shard-only --sites 50000 || exit $?

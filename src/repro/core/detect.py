@@ -57,6 +57,15 @@ class Finding:
             "time_at_risk_s": float(self.time_at_risk_s),
         }
 
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Finding":
+        """Inverse of `to_dict` (watch-daemon checkpoint restore)."""
+        return cls(detector=d["analyzer"], severity=d["severity"],
+                   message=d["message"],
+                   wasted_bytes=float(d.get("wasted_bytes", 0.0)),
+                   site=d.get("site", ""),
+                   time_at_risk_s=float(d.get("time_at_risk_s", 0.0)))
+
 
 def rank_findings(findings: List[Finding]) -> List[Finding]:
     """Severity-major, wire-bytes-at-risk-minor ordering (stable)."""

@@ -123,6 +123,11 @@ class Trace:
     computed requires an explicit `invalidate()`.
     """
 
+    # set by a salvage ingest (`tracer.trace_from_hlo(recover=True)`):
+    # the `hlo_parser.SalvageReport` describing what the damaged module
+    # lost, None for a clean/strict parse
+    salvage = None
+
     def __init__(self, label: str, mesh_shape: Tuple[int, ...],
                  mesh_axes: Tuple[str, ...], num_devices: int,
                  events: Optional[List[CollectiveEvent]] = None,

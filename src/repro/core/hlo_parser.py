@@ -479,7 +479,146 @@ _FAST_STATS_RE = re.compile(
     r"\((.*)$")
 
 
-def parse_hlo_store(text: str, num_devices: int, shard_ctx: Optional[Dict] = None):
+# --------------------------------------------------------------------------
+# salvage parsing — recover the intact computations of a damaged module
+# --------------------------------------------------------------------------
+
+# a line consisting solely of the computation-closing brace (the HLO
+# terminator) — the structural-intactness witness salvage clamps spans to
+_CLOSE_LINE_RE = re.compile(r"^[ \t]*\}[ \t]*\r?$", re.MULTILINE)
+
+
+@dataclass
+class SalvageReport:
+    """What salvage parsing dropped from a damaged module.
+
+    Attached to the store a `parse_hlo_store(..., recover=True)` returns
+    so partial ingests carry provenance: how much of the input was
+    unusable (`bytes_skipped`), which computations were lost (`dropped`),
+    and the first structural or parse error encountered (`first_error`).
+    """
+
+    total_bytes: int = 0
+    bytes_skipped: int = 0
+    computations_total: int = 0
+    computations_dropped: int = 0
+    dropped: List[str] = field(default_factory=list)
+    first_error: str = ""
+
+    @property
+    def clean(self) -> bool:
+        """True when nothing was dropped — the parse was lossless."""
+        return self.bytes_skipped == 0 and self.computations_dropped == 0
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "clean": self.clean,
+            "total_bytes": int(self.total_bytes),
+            "bytes_skipped": int(self.bytes_skipped),
+            "computations_total": int(self.computations_total),
+            "computations_dropped": int(self.computations_dropped),
+            "dropped": list(self.dropped),
+            "first_error": self.first_error,
+        }
+
+
+def _salvage_split(text: str) -> Tuple[List[Tuple[str, str]], SalvageReport]:
+    """Structurally-intact computation chunks of a possibly-damaged module.
+
+    Each verified header span is clamped at its *last* closing-brace
+    line: a truncated final computation (no terminator) is dropped
+    whole, and non-whitespace trailing garbage after a terminator (a
+    header line cut mid-write, spliced junk) is skipped — so no chunk
+    ever contains a partial op line that could parse into a wrong row.
+    Duplicate names keep the last definition at the first occurrence's
+    position, mirroring `_split_computations`' dict-overwrite order.
+    """
+    starts, ends, names, _entry = _comp_spans(text)
+    report = SalvageReport(total_bytes=len(text),
+                           computations_total=len(set(names)))
+    if not starts:
+        if text.strip():
+            report.bytes_skipped = len(text)
+            report.first_error = "no computation headers found"
+        return [], report
+
+    last = {name: i for i, name in enumerate(names)}
+    seen: set = set()
+    kept: List[Tuple[str, str]] = []
+    for name in names:
+        if name in seen:
+            continue
+        seen.add(name)
+        i = last[name]
+        seg = text[starts[i]:ends[i]]
+        close = None
+        for m in _CLOSE_LINE_RE.finditer(seg):
+            close = m
+        if close is None:
+            report.computations_dropped += 1
+            report.dropped.append(name)
+            report.bytes_skipped += len(seg)
+            if not report.first_error:
+                report.first_error = (f"computation %{name} truncated "
+                                      f"(no closing brace)")
+            continue
+        body, tail = seg[:close.end()], seg[close.end():]
+        if tail.strip():
+            report.bytes_skipped += len(tail)
+            if not report.first_error:
+                report.first_error = (f"unparseable trailing bytes after "
+                                      f"computation %{name}")
+        kept.append((name, body + "\n"))
+    return kept, report
+
+
+def _parse_hlo_store_salvage(text: str, num_devices: int):
+    """`parse_hlo_store(recover=True)`: never raise, drop what's broken.
+
+    Two recovery tiers: (1) *structural* — clamp every computation span
+    at its closing brace and drop unterminated ones, so any truncation
+    offset yields only rows from intact computations; (2) *content* — if
+    the cleaned text still fails to parse (corruption inside an intact-
+    looking computation, e.g. a mangled replica-group attr), re-parse
+    per computation under the shared module context and drop only the
+    raising ones, merging the survivors byte-identically to a serial
+    parse of them (the PR 5 shard machinery).
+
+    Returns `(store, stats, report)`.
+    """
+    from repro.core.store import TraceStore
+
+    kept, report = _salvage_split(text)
+    clean = "".join(body for _name, body in kept)
+    try:
+        store, stats = parse_hlo_store(clean, num_devices)
+        return store, stats, report
+    except Exception as e:
+        if not report.first_error:
+            report.first_error = f"{type(e).__name__}: {e}"
+
+    _spans, ctx = _split_spans(clean, 1)
+    stores, statss = [], []
+    for name, body in kept:
+        try:
+            st, ss = parse_hlo_store(body, num_devices, shard_ctx=ctx)
+        except Exception as e:
+            report.computations_dropped += 1
+            report.dropped.append(name)
+            report.bytes_skipped += len(body)
+            if not report.first_error:
+                report.first_error = f"computation %{name}: {e}"
+            continue
+        stores.append(st)
+        statss.append(ss)
+    store = TraceStore.merge(stores) if stores \
+        else parse_hlo_store("", num_devices)[0]
+    stats = HloOpStats.merged(statss)
+    return store, stats, report
+
+
+def parse_hlo_store(text: str, num_devices: int,
+                    shard_ctx: Optional[Dict] = None, recover: bool = False):
     """Single-pass fast path: collective op lines -> `TraceStore` columns.
 
     Equivalent to `parse_hlo` + `TraceStore.from_events` but ~an order of
@@ -500,8 +639,18 @@ def parse_hlo_store(text: str, num_devices: int, shard_ctx: Optional[Dict] = Non
     entry computation, while conditions, and fusion call sites may live
     in other chunks).
 
+    `recover=True` switches to salvage mode for damaged dumps: instead
+    of raising on a truncated or locally-corrupted module, recover every
+    structurally-intact computation (see `_parse_hlo_store_salvage`) and
+    return `(store, stats, report)` with a `SalvageReport` describing
+    what was dropped.  The default path is untouched — clean ingest pays
+    nothing for the recovery machinery.
+
     Returns `(store, stats)` with `stats` identical to the reference path.
     """
+    if recover:
+        return _parse_hlo_store_salvage(text, num_devices)
+
     from repro.core.attribution import split_op_name
     from repro.core.store import Categorical, TraceStore
 
@@ -922,20 +1071,16 @@ def _ref_callers_global(text: str, comp_at) -> Dict[str, List[str]]:
     return out
 
 
-def _split_spans(text: str, n_shards: int):
-    """(chunk spans, shared context) for a sharded parse of one module.
+def _comp_spans(text: str
+                ) -> Tuple[List[int], List[int], List[str], Optional[str]]:
+    """Verified computation header spans: (starts, ends, names, entry).
 
-    Everything runs as C-level regex scans over the raw text (no
-    per-line Python loop): verified computation headers give the chunk
-    boundaries, and the multiplicity context is rebuilt from *targeted*
-    scans — all while edges, plus call edges only where they can change
-    the fixpoint (chains activating a while-containing computation, and
-    the closure reached from loop bodies).  Edges from multiplicity-1
-    computations elsewhere are no-ops in the serial max-propagation
-    (they assign the default), so dropping them preserves the result.
+    A C-level candidate scan for `{`-at-end-of-line, each hit verified
+    against the exact `_split_computations` header condition.  Span i
+    runs from its header's line start to the next verified header (or
+    EOF) — the unit both the sharded splitter and the salvage parser
+    partition the module into.
     """
-    import bisect
-
     starts: List[int] = []
     names: List[str] = []
     entry_name: Optional[str] = None
@@ -962,6 +1107,24 @@ def _split_spans(text: str, n_shards: int):
         if is_entry:
             entry_name = name
     ends = starts[1:] + [len(text)]
+    return starts, ends, names, entry_name
+
+
+def _split_spans(text: str, n_shards: int):
+    """(chunk spans, shared context) for a sharded parse of one module.
+
+    Everything runs as C-level regex scans over the raw text (no
+    per-line Python loop): verified computation headers give the chunk
+    boundaries, and the multiplicity context is rebuilt from *targeted*
+    scans — all while edges, plus call edges only where they can change
+    the fixpoint (chains activating a while-containing computation, and
+    the closure reached from loop bodies).  Edges from multiplicity-1
+    computations elsewhere are no-ops in the serial max-propagation
+    (they assign the default), so dropping them preserves the result.
+    """
+    import bisect
+
+    starts, ends, names, entry_name = _comp_spans(text)
     # duplicate names: the serial line parser keeps the *last* definition's
     # content at the *first* occurrence's position (dict overwrite preserves
     # key order), so chunks carry the last span, ordered by first sighting

@@ -16,20 +16,45 @@ import os
 import tempfile
 
 
+def _fsync_dir(dirpath: str) -> None:
+    """fsync a directory so a just-renamed entry survives power loss.
+
+    `os.replace` makes the rename atomic for concurrent *readers*, but
+    the new directory entry itself lives in the page cache until the
+    directory inode is flushed — a crash between the rename and that
+    flush can resurrect the old file (or neither).  Checkpoint/resume
+    correctness (the watch daemon) needs the rename to be durable, not
+    just atomic.  Filesystems that cannot fsync a directory fd (or
+    platforms without O_DIRECTORY) are tolerated silently.
+    """
+    flags = os.O_RDONLY | getattr(os, "O_DIRECTORY", 0)
+    try:
+        fd = os.open(dirpath, flags)
+    except OSError:
+        return
+    try:
+        with contextlib.suppress(OSError):
+            os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
 @contextlib.contextmanager
 def atomic_open(path: str, mode: str = "w"):
     """`open(path, mode)` with atomic-replace semantics.
 
     Yields a file object over a temp file created in `path`'s directory
     (same filesystem, so the final rename cannot cross a mount).  On
-    clean exit the temp file is flushed, fsync'd, and renamed over
-    `path`; on any error it is removed and `path` is left untouched.
-    `mode` must be a write mode ("w" or "wb").
+    clean exit the temp file is flushed, fsync'd, renamed over `path`,
+    and the parent directory is fsync'd (the rename is durable, not
+    just atomic); on any error it is removed and `path` is left
+    untouched.  `mode` must be a write mode ("w" or "wb").
     """
     if mode not in ("w", "wb"):
         raise ValueError(f"atomic_open requires a write mode, got {mode!r}")
     target = os.path.abspath(path)
-    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(target),
+    parent = os.path.dirname(target)
+    fd, tmp = tempfile.mkstemp(dir=parent,
                                prefix=os.path.basename(target) + ".",
                                suffix=".tmp")
     try:
@@ -38,6 +63,7 @@ def atomic_open(path: str, mode: str = "w"):
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, target)
+        _fsync_dir(parent)
     except BaseException:
         with contextlib.suppress(OSError):
             os.unlink(tmp)

@@ -15,7 +15,9 @@ CLI:
     python -m repro.core.session demo  [--out PATH] [--format json|npz]
     python -m repro.core.session ingest OUT FILE [FILE ...] [--mesh 2,4]
                                         [--axes data,model] [--workers N]
-                                        [--shards N]
+                                        [--shards N] [--errors raise|skip|
+                                        salvage] [--retries N] [--timeout S]
+                                        [--json]
     python -m repro.core.session show  PATH
     python -m repro.core.session table PATH [--by kind_link|semantic|site] \\
                                             [--metric bytes|time|count]
@@ -30,7 +32,9 @@ CLI:
                                         [--report-html PATH] \\
                                         [--summary PATH] [--settle S] \\
                                         [--interval S] [--once] \\
-                                        [--fail-on SEV] [--max-rounds N]
+                                        [--fail-on SEV] [--max-rounds N] \\
+                                        [--errors raise|skip|salvage] \\
+                                        [--checkpoint PATH]
     python -m repro.core.session lint  PATH [PATH ...] [--mesh 2,4] \\
                                         [--axes data,model] [--json] \\
                                         [--fail-on critical|warn|info|never]
@@ -48,6 +52,14 @@ detect), 2 on input errors.
 an HLO dump directory, ingests new/changed files incrementally
 (append-mode stores + streaming detector/lint state), and re-emits its
 outputs atomically every poll; `--once` drains the directory and exits.
+Damaged dumps are salvaged or quarantined instead of crashing the loop
+(exit 3 when anything was degraded, after the `--fail-on` alert exit 1),
+and `--checkpoint` makes the daemon crash-resumable.
+
+`ingest` exits 0 on full success; with `--errors=skip|salvage` it exits
+3 when any input was skipped, salvaged or quarantined (the session is
+still written, carrying the machine-readable ingest report), and 2 for
+hard failures.
 """
 from __future__ import annotations
 
@@ -55,6 +67,7 @@ import dataclasses
 import json
 import os
 import sys
+import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -114,6 +127,76 @@ class IngestError(RuntimeError):
     """
 
 
+@dataclasses.dataclass
+class IngestRecord:
+    """Per-input provenance of one `from_hlo` ingest.
+
+    `status` is the outcome class:
+      * `ok`          — parsed cleanly (possibly after retries);
+      * `salvaged`    — strict parse failed, salvage parsing recovered a
+        partial trace (`salvage` holds the `SalvageReport` dict);
+      * `skipped`     — failed under `errors="skip"`, input excluded;
+      * `quarantined` — failed even recovery (unreadable bytes, hung
+        worker that also failed serially), input excluded.
+    """
+
+    source: str
+    label: str
+    status: str = "ok"
+    attempts: int = 1
+    error: str = ""
+    salvage: Optional[Dict[str, object]] = None
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"source": self.source, "label": self.label,
+                "status": self.status, "attempts": int(self.attempts),
+                "error": self.error, "salvage": self.salvage}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "IngestRecord":
+        return cls(source=d["source"], label=d["label"],
+                   status=d.get("status", "ok"),
+                   attempts=int(d.get("attempts", 1)),
+                   error=d.get("error", ""), salvage=d.get("salvage"))
+
+
+@dataclasses.dataclass
+class IngestReport:
+    """Machine-readable record of every input a bulk ingest touched.
+
+    Attached to the session `from_hlo` returns (and persisted with it),
+    so a partial session carries the provenance of what was skipped,
+    salvaged, or quarantined — the contract the `session ingest` exit
+    codes (0 clean / 3 degraded) and the watch-daemon summary build on.
+    """
+
+    errors: str = "raise"
+    records: List[IngestRecord] = dataclasses.field(default_factory=list)
+
+    @property
+    def degraded(self) -> List[IngestRecord]:
+        return [r for r in self.records if r.status != "ok"]
+
+    @property
+    def ok(self) -> bool:
+        return not self.degraded
+
+    def to_dict(self) -> Dict[str, object]:
+        return {"errors": self.errors,
+                "records": [r.to_dict() for r in self.records]}
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "IngestReport":
+        return cls(errors=d.get("errors", "raise"),
+                   records=[IngestRecord.from_dict(r)
+                            for r in d.get("records", ())])
+
+
+def _retry_delays(retries: int, backoff_s: float):
+    """Exponential backoff schedule: backoff, 2*backoff, 4*backoff, ..."""
+    return [backoff_s * (1 << i) for i in range(max(retries, 0))]
+
+
 def _ingest_one(job) -> Trace:
     """Worker: ingest one (label, hlo_text) through the columnar pipeline.
 
@@ -126,21 +209,98 @@ def _ingest_one(job) -> Trace:
                           shards=shards)
 
 
+def _errstr(e: BaseException) -> str:
+    return f"{type(e).__name__}: {e}"
+
+
+def _read_text(path) -> str:
+    with open(path) as f:
+        return f.read()
+
+
 def _ingest_jobs(items, mesh: MeshSpec, hw: Hardware, engine: str,
-                 shards: Optional[int]) -> Tuple[List, List[str]]:
-    """(worker jobs, per-job source names for error attribution)."""
-    jobs, sources = [], []
+                 shards: Optional[int], *, errors: str = "raise",
+                 retries: int = 0, backoff_s: float = 0.0) -> List:
+    """One entry per input: (source, item, job | None, IngestRecord | None).
+
+    A `None` job means the input could not even be read (missing file,
+    undecodable bytes); under a non-raise policy that failure is
+    pre-recorded as quarantined — after read retries with backoff, the
+    file may still be landing — instead of raised, and the entry is
+    excluded from parsing.
+    """
+    entries = []
     for it in items:
         if isinstance(it, (tuple, list)):
             label, text = it
-            sources.append(label)
+            entries.append((label, it, (label, text, mesh, hw, engine,
+                                        shards), None))
+            continue
+        src = str(it)
+        label = os.path.splitext(os.path.basename(src))[0]
+        attempts, err, text = 1, None, None
+        try:
+            text = _read_text(src)
+        except Exception as e:
+            err = e
+            if errors == "raise":
+                if isinstance(e, FileNotFoundError):
+                    raise      # CLI reports the filename specially
+                raise IngestError(f"failed to read {src!r}: {e}") from e
+            for delay in _retry_delays(retries, backoff_s):
+                time.sleep(delay)
+                attempts += 1
+                try:
+                    text = _read_text(src)
+                    err = None
+                    break
+                except Exception as e2:
+                    err = e2
+        if err is not None:
+            entries.append((src, it, None,
+                            IngestRecord(src, label, "quarantined", attempts,
+                                         error=_errstr(err))))
         else:
-            label = os.path.splitext(os.path.basename(str(it)))[0]
-            with open(it) as f:
-                text = f.read()
-            sources.append(str(it))
-        jobs.append((label, text, mesh, hw, engine, shards))
-    return jobs, sources
+            entries.append((src, it, (label, text, mesh, hw, engine,
+                                      shards), None))
+    return entries
+
+
+def _recover_one(src: str, item, job, err: BaseException, errors: str,
+                 retries: int, backoff_s: float):
+    """Recovery ladder for one input whose strict parse failed.
+
+    retry with exponential backoff (re-reading path inputs — the dump
+    may have still been landing) -> salvage parse (`errors="salvage"`,
+    columnar engine) -> skip/quarantine.  Returns (Trace | None,
+    IngestRecord); a None trace means the input is excluded.
+    """
+    label, text, mesh, hw, engine, shards = job
+    attempts, last = 1, err
+    for delay in _retry_delays(retries, backoff_s):
+        if delay > 0:
+            time.sleep(delay)
+        attempts += 1
+        try:
+            if not isinstance(item, (tuple, list)):
+                text = _read_text(item)
+            return (_ingest_one((label, text, mesh, hw, engine, shards)),
+                    IngestRecord(src, label, "ok", attempts))
+        except Exception as e:
+            last = e
+    if errors == "salvage" and engine == "columnar" and isinstance(text, str):
+        from repro.core.tracer import trace_from_hlo
+        try:
+            tr = trace_from_hlo(text, mesh, label=label, hw=hw,
+                                engine=engine, recover=True)
+            sal = tr.salvage.to_dict() if tr.salvage is not None else None
+            return tr, IngestRecord(src, label, "salvaged", attempts,
+                                    error=_errstr(last), salvage=sal)
+        except Exception as e:
+            last = e
+    status = "skipped" if errors == "skip" else "quarantined"
+    return None, IngestRecord(src, label, status, attempts,
+                              error=_errstr(last))
 
 
 class TraceSession:
@@ -148,6 +308,10 @@ class TraceSession:
 
     def __init__(self, name: str, traces: Optional[Sequence[Trace]] = None):
         self.name = name
+        # provenance of the bulk ingest that built this session (set by
+        # `from_hlo`, persisted through save/load); None for hand-built
+        # or legacy-loaded sessions
+        self.ingest_report: Optional[IngestReport] = None
         self._traces: List[Trace] = []
         for t in traces or ():
             self.add(t)
@@ -256,7 +420,11 @@ class TraceSession:
                  mesh: MeshSpec, *, hw: Hardware = V5E,
                  engine: str = "columnar",
                  max_workers: Optional[int] = None,
-                 shards: Optional[int] = None) -> "TraceSession":
+                 shards: Optional[int] = None,
+                 errors: str = "raise",
+                 retries: int = 1,
+                 retry_backoff_s: float = 0.1,
+                 timeout_s: Optional[float] = None) -> "TraceSession":
         """Ingest many HLO dumps into one session, in parallel.
 
         `items` are either `(label, hlo_text)` pairs or paths to HLO text
@@ -265,9 +433,32 @@ class TraceSession:
         process; results come back as columnar stores.  Falls back to
         serial ingest when the *pool* is unavailable (restricted
         environments, spawn bootstrap failure, pool death) or for a
-        single file — but a genuine per-file failure raises
-        `IngestError` naming the offending input instead of silently
-        re-running everything serially.
+        single file.
+
+        `errors` is the per-input failure policy:
+          * `"raise"` (default) — a genuine per-file failure raises
+            `IngestError` naming the offending input instead of silently
+            re-running everything serially.  Zero overhead on clean
+            inputs; the returned session still carries an all-ok
+            `ingest_report`.
+          * `"skip"` — failed inputs are retried (`retries` attempts
+            with exponential backoff from `retry_backoff_s`, re-reading
+            path inputs) then dropped; the session holds the survivors.
+          * `"salvage"` — like skip, but a damaged module is first
+            re-parsed with salvage recovery
+            (`parse_hlo_store(recover=True)`): intact computations are
+            kept as a partial trace, and only inputs that defeat even
+            salvage (unreadable bytes, no recoverable computations) are
+            quarantined.
+
+        Every input's outcome lands in `session.ingest_report`
+        (an `IngestReport`, persisted through save/load), so a partial
+        session is never silently partial.
+
+        `timeout_s` bounds each worker's result: a hung worker kills the
+        pool, and the stuck input plus everything still pending is
+        retried serially under the same `errors` policy (quarantined if
+        it fails again).
 
         `shards` additionally splits each *single* module per-computation
         across workers (`None` = auto above `hlo_parser.AUTO_SHARD_BYTES`,
@@ -276,14 +467,28 @@ class TraceSession:
         explicit `shards=N` is honored inside each file worker (the
         caller opted into the oversubscription).
         """
+        if errors not in ("raise", "skip", "salvage"):
+            raise ValueError(f"errors must be 'raise', 'skip' or 'salvage', "
+                             f"got {errors!r}")
         pool_files = max_workers is None or max_workers > 1
         if max_workers is None:
             max_workers = min(len(items), os.cpu_count() or 1)
         pool_files = pool_files and max_workers > 1 and len(items) > 1
-        jobs, sources = _ingest_jobs(items, mesh, hw, engine,
-                                     (shards or 1) if pool_files else shards)
-        traces: Optional[List[Trace]] = None
+        entries = _ingest_jobs(items, mesh, hw, engine,
+                               (shards or 1) if pool_files else shards,
+                               errors=errors, retries=retries,
+                               backoff_s=retry_backoff_s)
+        # input-order maps: results[i] -> Trace, recs[i] -> IngestRecord
+        results: Dict[int, Trace] = {}
+        recs: Dict[int, IngestRecord] = {
+            i: rec for i, (_s, _it, job, rec) in enumerate(entries)
+            if job is None}
+        live = [(i, src, it, job)
+                for i, (src, it, job, _rec) in enumerate(entries)
+                if job is not None]
+        pending = None      # live subset to (re)run serially
         if pool_files:
+            import concurrent.futures as cf
             import multiprocessing
             import pickle
             from concurrent.futures import ProcessPoolExecutor
@@ -307,34 +512,67 @@ class TraceSession:
                 if ex is not None:
                     ex.shutdown(wait=False, cancel_futures=True)
                 ex = None
-            if ex is not None:
-                futs = [ex.submit(_ingest_one, j) for j in jobs]
+            if ex is None:
+                pending = live
+            else:
+                futs = [ex.submit(_ingest_one, job)
+                        for _i, _s, _it, job in live]
+                pending = []
+                dead = False
                 try:
-                    traces = []
-                    for src, fut in zip(sources, futs):
+                    for (i, src, it, job), fut in zip(live, futs):
+                        if dead:
+                            pending.append((i, src, it, job))
+                            continue
                         try:
-                            traces.append(fut.result())
+                            results[i] = fut.result(timeout=timeout_s)
+                            recs[i] = IngestRecord(src, job[0])
                         except (BrokenProcessPool, pickle.PicklingError):
                             # the pool died, not the input: retry serially
-                            traces = None
-                            break
+                            dead = True
+                            pending.append((i, src, it, job))
+                        except cf.TimeoutError:
+                            # hung worker: kill the pool; this input and
+                            # everything still pending retries serially
+                            # (quarantined under skip/salvage if it fails
+                            # again)
+                            dead = True
+                            pending.append((i, src, it, job))
                         except Exception as e:
-                            raise IngestError(
-                                f"failed to ingest {src!r}: {e}") from e
+                            if errors == "raise":
+                                raise IngestError(
+                                    f"failed to ingest {src!r}: {e}") from e
+                            tr, rec = _recover_one(src, it, job, e, errors,
+                                                   retries, retry_backoff_s)
+                            if tr is not None:
+                                results[i] = tr
+                            recs[i] = rec
                 finally:
                     ex.shutdown(wait=False, cancel_futures=True)
-            if traces is None:
+            if pending:
                 # serial per file (texts already in memory); single-module
                 # sharding may still parallelize inside each parse
-                jobs = [j[:5] + (shards,) for j in jobs]
-        if traces is None:
-            traces = []
-            for src, j in zip(sources, jobs):
-                try:
-                    traces.append(_ingest_one(j))
-                except Exception as e:
+                pending = [(i, src, it, job[:5] + (shards,))
+                           for i, src, it, job in pending]
+        if pending is None:
+            pending = live
+        for i, src, it, job in pending:
+            try:
+                results[i] = _ingest_one(job)
+                recs[i] = IngestRecord(src, job[0])
+            except Exception as e:
+                if errors == "raise":
                     raise IngestError(f"failed to ingest {src!r}: {e}") from e
-        return cls(name, traces)
+                tr, rec = _recover_one(src, it, job, e, errors,
+                                       retries, retry_backoff_s)
+                if tr is not None:
+                    results[i] = tr
+                recs[i] = rec
+        report = IngestReport(errors=errors,
+                              records=[recs[i] for i in sorted(recs)])
+        sess = cls(name, [results[i] for i in sorted(results)])
+        sess.ingest_report = report
+        return sess
 
     # -- persistence ---------------------------------------------------------
 
@@ -348,13 +586,16 @@ class TraceSession:
         written; `load` applies the same extension defaulting, so
         `load(p)` works for any extensionless `p` passed to `save`.
         """
+        rep = self.ingest_report.to_dict() if self.ingest_report else None
         if path.endswith(".npz"):
             arrs: Dict[str, np.ndarray] = {}
             for i, t in enumerate(self._traces):
                 arrs.update(t.store.npz_arrays(prefix=f"t{i}_"))
-            arrs["session"] = np.array(json.dumps({
-                "name": self.name,
-                "traces": [_trace_meta(t) for t in self._traces]}))
+            side = {"name": self.name,
+                    "traces": [_trace_meta(t) for t in self._traces]}
+            if rep is not None:
+                side["ingest_report"] = rep
+            arrs["session"] = np.array(json.dumps(side))
             with atomic_open(path, "wb") as f:
                 np.savez_compressed(f, **arrs)
             return path
@@ -362,6 +603,8 @@ class TraceSession:
             path += ".json"
         payload = {"name": self.name,
                    "traces": [trace_to_dict(t) for t in self._traces]}
+        if rep is not None:
+            payload["ingest_report"] = rep
         with atomic_open(path, "w") as f:
             json.dump(payload, f, separators=(",", ":"))
         return path
@@ -377,11 +620,19 @@ class TraceSession:
                     _trace_from_meta(
                         meta, TraceStore.from_npz_arrays(arrs, prefix=f"t{i}_"))
                     for i, meta in enumerate(side["traces"])]
-            return cls(side["name"], traces)
+            sess = cls(side["name"], traces)
+            if side.get("ingest_report") is not None:
+                sess.ingest_report = IngestReport.from_dict(
+                    side["ingest_report"])
+            return sess
         with open(path) as f:
             payload = json.load(f)
-        return cls(payload["name"],
+        sess = cls(payload["name"],
                    [trace_from_dict(d) for d in payload["traces"]])
+        if payload.get("ingest_report") is not None:
+            sess.ingest_report = IngestReport.from_dict(
+                payload["ingest_report"])
+        return sess
 
 
 # --------------------------------------------------------------------------
@@ -428,8 +679,19 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--format", choices=("json", "npz"), default=None)
     p.add_argument("--sites", type=int, default=2000)
 
-    p = sub.add_parser("ingest", help="parse HLO dump files into a session "
-                                      "(parallel columnar ingest)")
+    p = sub.add_parser(
+        "ingest",
+        help="parse HLO dump files into a session (parallel columnar "
+             "ingest)",
+        description="Parse HLO dump files into one saved session. "
+                    "Exit codes: with --errors=raise (default), 0 on "
+                    "success and 2 on the first bad input; with "
+                    "--errors=skip|salvage, 0 only when every input "
+                    "ingested cleanly, 3 when any input was skipped, "
+                    "salvaged or quarantined (the session is still "
+                    "written with the survivors and carries the ingest "
+                    "report), and 2 for hard failures (unwritable "
+                    "output, bad arguments).")
     p.add_argument("out", help="output session path (.json or .npz)")
     p.add_argument("files", nargs="+", help="HLO text files")
     p.add_argument("--mesh", default="2,4",
@@ -442,6 +704,27 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                         "this many parse shards (default: auto above "
                         f"{AUTO_SHARD_BYTES >> 20}MB, or serial when the "
                         "multi-file pool owns the cores; 1 = serial)")
+    p.add_argument("--errors", choices=("raise", "skip", "salvage"),
+                   default="raise",
+                   help="per-input failure policy: raise (default) aborts "
+                        "with exit 2 on the first bad input; skip retries "
+                        "then drops bad inputs; salvage additionally "
+                        "recovers the intact computations of damaged "
+                        "modules as partial traces. skip/salvage exit 0 "
+                        "on full success, 3 when anything was degraded")
+    p.add_argument("--retries", type=int, default=1,
+                   help="re-attempts per failed input, with exponential "
+                        "backoff (default 1; skip/salvage only)")
+    p.add_argument("--retry-backoff", type=float, default=0.1,
+                   help="initial retry backoff in seconds, doubling per "
+                        "attempt (default 0.1)")
+    p.add_argument("--timeout", type=float, default=None,
+                   help="per-file worker timeout in seconds: a hung "
+                        "worker kills the pool and the file is retried "
+                        "serially, then quarantined (default: none)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="print the machine-readable ingest report "
+                        "(every input's outcome) to stdout")
 
     p = sub.add_parser("watch", help="tail an HLO dump directory: ingest "
                                      "new/changed files, keep rolling "
@@ -473,13 +756,33 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--fail-on", choices=("critical", "warn", "info", "never"),
                    default="never",
                    help="print alerts and exit 1 when any finding reaches "
-                        "this severity (default: never)")
+                        "this severity (default: never); without alerts "
+                        "the daemon exits 3 when any input was salvaged "
+                        "or quarantined, else 0")
     p.add_argument("--shards", type=int, default=None,
                    help="parse shards per ingested file (default: auto)")
     p.add_argument("--max-rounds", type=int, default=None,
                    help="stop after this many polls (default: unbounded)")
     p.add_argument("--quiet", action="store_true",
                    help="suppress per-round progress lines")
+    p.add_argument("--errors", choices=("raise", "skip", "salvage"),
+                   default="salvage",
+                   help="per-file failure policy: salvage (default) "
+                        "recovers the intact computations of damaged "
+                        "dumps, skip quarantines them whole, raise "
+                        "crashes the daemon (strict mode)")
+    p.add_argument("--max-retries", type=int, default=3,
+                   help="same-signature re-attempts (with exponential "
+                        "backoff) before a failing file's quarantine "
+                        "seals until the file changes (default 3)")
+    p.add_argument("--retry-backoff", type=float, default=0.5,
+                   help="initial quarantine retry backoff in seconds, "
+                        "doubling per failure (default 0.5)")
+    p.add_argument("--checkpoint", default=None,
+                   help="crash-resume checkpoint path (.npz): atomically "
+                        "rewritten after every state-changing poll; a "
+                        "daemon restarted on the same checkpoint resumes "
+                        "without re-parsing already-ingested files")
 
     p = sub.add_parser("show", help="per-trace summaries of a saved session")
     p.add_argument("path")
@@ -579,7 +882,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             sess = TraceSession.from_hlo(
                 os.path.splitext(os.path.basename(args.out))[0],
                 args.files, mesh, max_workers=args.workers,
-                shards=args.shards)
+                shards=args.shards, errors=args.errors,
+                retries=args.retries, retry_backoff_s=args.retry_backoff,
+                timeout_s=args.timeout)
         except FileNotFoundError as e:
             print(f"error: no such file: {e.filename}", file=sys.stderr)
             return 2
@@ -588,9 +893,18 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             return 2
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         path = sess.save(args.out)
-        print(f"session '{sess.name}': ingested {len(sess)} traces -> {path}")
-        _print_totals(sess)
-        return 0
+        rep = sess.ingest_report
+        if args.as_json:
+            print(json.dumps(rep.to_dict(), indent=1))
+        else:
+            print(f"session '{sess.name}': ingested {len(sess)} traces "
+                  f"-> {path}")
+            if len(sess):
+                _print_totals(sess)
+        for r in rep.degraded:
+            print(f"ingest: [{r.status}] {r.source} "
+                  f"({r.attempts} attempt(s)): {r.error}", file=sys.stderr)
+        return 3 if rep.degraded else 0
 
     if args.cmd == "watch":
         from repro.core.watch import WatchConfig, WatchDaemon
@@ -604,7 +918,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"error: no such directory: {args.root}", file=sys.stderr)
             return 2
         for out in (args.out, args.report_json, args.report_html,
-                    args.summary):
+                    args.summary, args.checkpoint):
             if out:
                 os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
         cfg = WatchConfig(
@@ -614,7 +928,9 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             summary=args.summary, settle_s=args.settle,
             interval_s=args.interval, once=args.once,
             fail_on=args.fail_on, shards=args.shards,
-            max_rounds=args.max_rounds, quiet=args.quiet)
+            max_rounds=args.max_rounds, quiet=args.quiet,
+            errors=args.errors, max_retries=args.max_retries,
+            retry_backoff_s=args.retry_backoff, checkpoint=args.checkpoint)
         return WatchDaemon(cfg).run()
 
     if args.cmd == "lint":

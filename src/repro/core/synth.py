@@ -10,6 +10,7 @@ a compiled-HLO trace exercises.
 from __future__ import annotations
 
 import os
+import re
 from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -350,6 +351,101 @@ def synthetic_hlo(n_sites: int = 1000, seed: int = 0, trip_count: int = 12,
         "",
     ]
     return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# chaos fault injectors — corrupt dumps for the fault-tolerance test matrix
+# --------------------------------------------------------------------------
+
+# every injector `corrupt_hlo` supports; the chaos suite and CI smoke job
+# iterate this matrix, so a new failure mode added here is exercised
+# everywhere automatically
+CORRUPT_MODES = ("truncate", "splice", "dup_lines", "drop_lines",
+                 "mangle_rg", "binary")
+
+_GARBAGE = ("@@@ CORRUPT <<<%%%>>> \x01\x02 not-an-hlo-line ((((\n"
+            "ENTRY %mid (x: f -> TRUNCATED HEADER\n")
+
+
+def corrupt_hlo(text: str, mode: str, seed: int = 0,
+                at: Optional[int] = None):
+    """Damage an HLO module the way real fleet ingest sees damage.
+
+    Modes (see `CORRUPT_MODES`):
+      * `truncate`   — cut the text at byte `at` (default: a seeded
+        offset), the half-written/filesystem-truncated dump;
+      * `splice`     — insert a block of garbage text mid-module, the
+        interleaved-writer / corrupted-block case;
+      * `dup_lines`  — duplicate a random ~10% of lines (a retrying
+        writer appending twice);
+      * `drop_lines` — delete a random ~10% of lines (lost writes);
+      * `mangle_rg`  — corrupt a `replica_groups={{...}}` attr so the
+        parser raises mid-computation (content-level corruption that
+        salvage must isolate to one computation);
+      * `binary`     — splice invalid UTF-8 bytes and return `bytes`
+        (a non-text file in the dump dir; even salvage cannot read it,
+        so it must be quarantined, not crash the ingest).
+
+    Returns the damaged module as `str` (or `bytes` for `binary`).
+    Deterministic in `(text, mode, seed, at)`.
+    """
+    rng = np.random.default_rng(seed)
+    if mode == "truncate":
+        k = int(at) if at is not None \
+            else int(rng.integers(1, max(len(text), 2)))
+        return text[:k]
+    if mode == "splice":
+        k = int(at) if at is not None \
+            else int(rng.integers(0, max(len(text), 1)))
+        return text[:k] + _GARBAGE + text[k:]
+    if mode in ("dup_lines", "drop_lines"):
+        lines = text.splitlines(keepends=True)
+        pick = rng.random(len(lines)) < 0.1
+        out = []
+        for keep, line in zip(pick, lines):
+            if mode == "dup_lines":
+                out.append(line)
+                if keep:
+                    out.append(line)
+            elif not keep:
+                out.append(line)
+        return "".join(out)
+    if mode == "mangle_rg":
+        m = re.search(r"replica_groups=\{\{(\d+)", text)
+        if m is None:
+            raise ValueError("module has no explicit replica_groups attr "
+                             "to mangle")
+        return text[:m.end(1)] + "x" + text[m.end(1):]
+    if mode == "binary":
+        k = int(at) if at is not None \
+            else int(rng.integers(0, max(len(text), 1)))
+        return text[:k].encode() + b"\xff\xfe\x00\xc3\x28garbage\xff" \
+            + text[k:].encode()
+    raise ValueError(f"unknown corruption mode {mode!r} "
+                     f"(have {CORRUPT_MODES})")
+
+
+def write_corrupt_dump(root: str, modes: Sequence[str] = CORRUPT_MODES,
+                       sites_per_file: int = 120, seed: int = 0,
+                       prefix: str = "corrupt") -> List[str]:
+    """Materialize one damaged module per injector mode under `root`.
+
+    The chaos-suite counterpart of `write_hlo_dump`: each file is a
+    `synthetic_hlo` module run through one `corrupt_hlo` mode, named
+    `{prefix}_{mode}.txt`.  Returns the paths written.
+    """
+    from repro.core.persist import atomic_open
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for i, mode in enumerate(modes):
+        text = synthetic_hlo(n_sites=sites_per_file, seed=seed + i)
+        damaged = corrupt_hlo(text, mode, seed=seed + i)
+        path = os.path.join(root, f"{prefix}_{mode}.txt")
+        bmode = "wb" if isinstance(damaged, bytes) else "w"
+        with atomic_open(path, bmode) as f:
+            f.write(damaged)
+        paths.append(path)
+    return paths
 
 
 def write_hlo_dump(root: str, n_files: int = 3, sites_per_file: int = 200,

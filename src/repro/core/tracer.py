@@ -25,7 +25,8 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
                    memory_analysis: Any = None,
                    engine: str = "columnar",
                    shards: Optional[int] = None,
-                   shard_workers: Optional[int] = None) -> Trace:
+                   shard_workers: Optional[int] = None,
+                   recover: bool = False) -> Trace:
     """Assemble a multi-layer trace from compiled HLO text.
 
     `engine` selects the ingest pipeline:
@@ -41,11 +42,22 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
     the shard stores merged back byte-identically to a serial parse.
     `None` auto-shards above `hlo_parser.AUTO_SHARD_BYTES`; `1` forces
     the serial path.  `shard_workers` caps the pool (0 = in-process).
+
+    `recover=True` (columnar only) ingests a damaged module through
+    salvage parsing (`parse_hlo_store(recover=True)`): instead of
+    raising on truncated/corrupted input, the intact computations are
+    kept and `trace.salvage` carries the `SalvageReport` of what was
+    dropped.  Salvage always parses serially — a damaged module must
+    not be sharded across workers on unverified boundaries.
     """
+    salvage = None
     if engine == "columnar":
         n_shards = shards if shards is not None \
             else hlo_parser.auto_shards(len(hlo_text))
-        if n_shards > 1:
+        if recover:
+            store, stats, salvage = hlo_parser.parse_hlo_store(
+                hlo_text, mesh.num_devices, recover=True)
+        elif n_shards > 1:
             store, stats = hlo_parser.parse_hlo_store_sharded(
                 hlo_text, mesh.num_devices, n_shards,
                 max_workers=shard_workers)
@@ -56,6 +68,7 @@ def trace_from_hlo(hlo_text: str, mesh: MeshSpec, *, label: str = "step",
         attribution.attribute_store(store)
         tr = Trace.from_store(label, mesh.shape, mesh.axes, mesh.num_devices,
                               store, op_stats=stats)
+        tr.salvage = salvage
     elif engine == "rows":
         events, stats = hlo_parser.parse_hlo(hlo_text, mesh.num_devices)
         for ev in events:

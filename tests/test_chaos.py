@@ -1,0 +1,282 @@
+"""Chaos suite: fault injection over salvage parsing, batch ingest and
+the watch daemon.
+
+The contract under test (ISSUE: fault-tolerant fleet ingest): for ANY
+damaged input — truncated, spliced with garbage, line-mangled, binary —
+no entry point crashes, clean inputs come through byte-identical, and
+every degraded input is accounted for in the machine-readable ingest
+provenance (never silently dropped).
+"""
+import json
+import os
+
+import pytest
+
+from _hypothesis_compat import given, settings, strategies as st
+from repro.core import hlo_parser
+from repro.core.hlo_parser import SalvageReport, parse_hlo_store
+from repro.core.session import TraceSession, IngestError, _main
+from repro.core.synth import (CORRUPT_MODES, corrupt_hlo, synthetic_hlo,
+                              write_corrupt_dump)
+from repro.core.topology import MeshSpec
+from repro.core.tracer import trace_from_hlo
+from repro.core.watch import WatchConfig, WatchDaemon
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+N = MESH.num_devices
+
+TEXT = synthetic_hlo(n_sites=120, seed=11)
+STRICT_STORE, _ = parse_hlo_store(TEXT, N)          # parse-level reference
+CLEAN_TRACE = trace_from_hlo(TEXT, MESH, label="clean")   # full pipeline
+
+
+# -- salvage parsing: the recover=True contract ------------------------------
+
+def test_salvage_of_clean_text_is_lossless():
+    store, stats, rep = parse_hlo_store(TEXT, N, recover=True)
+    assert isinstance(rep, SalvageReport)
+    assert rep.clean and rep.bytes_skipped == 0 and rep.dropped == []
+    assert store.identical(STRICT_STORE)
+
+
+@settings(max_examples=60, deadline=None)
+@given(k=st.integers(min_value=0, max_value=len(TEXT)))
+def test_salvage_never_raises_for_any_truncation(k):
+    """Property: salvage of text[:k] never raises, never keeps rows from
+    a computation the report says it dropped, and accounts for every
+    skipped byte."""
+    store, stats, rep = parse_hlo_store(TEXT[:k], N, recover=True)
+    assert store.n <= STRICT_STORE.n
+    dropped = set(rep.dropped)
+    for row in store.rows():
+        assert "%" + row.computation not in dropped \
+            and row.computation not in dropped
+    assert 0 <= rep.bytes_skipped <= rep.total_bytes == k
+    assert rep.computations_dropped == len(rep.dropped)
+    if rep.computations_dropped or rep.bytes_skipped:
+        assert rep.first_error
+    # full-length truncation is the identity
+    if k == len(TEXT):
+        assert rep.clean and store.identical(STRICT_STORE)
+
+
+@pytest.mark.parametrize("mode", CORRUPT_MODES)
+def test_salvage_never_raises_for_any_injector(mode):
+    data = corrupt_hlo(TEXT, mode, seed=7)
+    if isinstance(data, bytes):     # undecodable: the read layer's problem
+        pytest.skip("binary corruption is rejected at read time")
+    store, stats, rep = parse_hlo_store(data, N, recover=True)
+    assert rep.to_dict()["computations_dropped"] == len(rep.dropped)
+
+
+def test_salvage_report_round_trips_to_dict():
+    data = corrupt_hlo(TEXT, "mangle_rg", seed=7)
+    with pytest.raises(ValueError):
+        parse_hlo_store(data, N)            # strict mode still raises
+    store, _stats, rep = parse_hlo_store(data, N, recover=True)
+    assert rep.dropped and not rep.clean
+    d = rep.to_dict()
+    assert d["dropped"] == rep.dropped
+    assert json.loads(json.dumps(d)) == d   # JSON-safe
+
+
+def test_trace_from_hlo_recover_carries_salvage_report():
+    data = corrupt_hlo(TEXT, "mangle_rg", seed=7)
+    tr = trace_from_hlo(data, MESH, recover=True)
+    assert tr.salvage is not None and tr.salvage.dropped
+    clean = trace_from_hlo(TEXT, MESH, recover=True)
+    assert clean.salvage is not None and clean.salvage.clean
+
+
+# -- batch ingest over a corrupt dump directory ------------------------------
+
+@pytest.fixture()
+def chaos_dir(tmp_path):
+    clean = os.path.join(str(tmp_path), "clean.txt")
+    with open(clean, "w") as f:
+        f.write(TEXT)
+    write_corrupt_dump(str(tmp_path), seed=4)
+    return str(tmp_path)
+
+
+def _files(root):
+    return sorted(os.path.join(root, f) for f in os.listdir(root)
+                  if f.endswith(".txt"))
+
+
+def test_batch_salvage_accounts_for_every_input(chaos_dir):
+    files = _files(chaos_dir)
+    sess = TraceSession.from_hlo("chaos", files, MESH, max_workers=1,
+                                 errors="salvage", retries=0,
+                                 retry_backoff_s=0)
+    rep = sess.ingest_report
+    assert [r.source for r in rep.records] == files     # nothing silent
+    by_src = {os.path.basename(r.source): r for r in rep.records}
+    assert by_src["clean.txt"].status == "ok"
+    # the clean file is byte-identical to a solo strict ingest
+    assert sess.get("clean").store.identical(CLEAN_TRACE.store)
+    for r in rep.degraded:
+        assert r.error, r
+        assert r.status in ("salvaged", "quarantined")
+    for r in rep.records:
+        if r.status == "salvaged":
+            assert r.salvage is not None and not r.salvage["clean"]
+    # undecodable bytes defeat even salvage
+    assert by_src["corrupt_binary.txt"].status == "quarantined"
+
+
+def test_batch_skip_drops_without_salvaging(chaos_dir):
+    files = _files(chaos_dir)
+    sess = TraceSession.from_hlo("chaos", files, MESH, max_workers=1,
+                                 errors="skip", retries=0, retry_backoff_s=0)
+    assert not any(r.status == "salvaged"
+                   for r in sess.ingest_report.records)
+    assert "clean" in sess.labels()
+
+
+def test_batch_raise_mode_rejects_corrupt_dir(chaos_dir):
+    with pytest.raises(IngestError):
+        TraceSession.from_hlo("chaos", _files(chaos_dir), MESH,
+                              max_workers=1)
+
+
+def test_batch_pool_salvage_matches_serial_salvage(chaos_dir, monkeypatch):
+    import concurrent.futures as cf
+
+    class FakeFuture:
+        def __init__(self, fn, *args):
+            self._fn, self._args = fn, args
+
+        def result(self, timeout=None):
+            return self._fn(*self._args)
+
+    class FakePool:
+        def __init__(self, *a, **k):
+            pass
+
+        def submit(self, fn, *args):
+            return FakeFuture(fn, *args)
+
+        def shutdown(self, *a, **k):
+            pass
+
+    files = _files(chaos_dir)
+    serial = TraceSession.from_hlo("chaos", files, MESH, max_workers=1,
+                                   errors="salvage", retries=0,
+                                   retry_backoff_s=0)
+    monkeypatch.setattr(cf, "ProcessPoolExecutor", FakePool)
+    pooled = TraceSession.from_hlo("chaos", files, MESH, max_workers=2,
+                                   errors="salvage", retries=0,
+                                   retry_backoff_s=0)
+    assert pooled.labels() == serial.labels()
+    for lab in serial.labels():
+        assert pooled.get(lab).store.identical(serial.get(lab).store)
+    assert [r.to_dict() for r in pooled.ingest_report.records] == \
+        [r.to_dict() for r in serial.ingest_report.records]
+
+
+def test_pool_timeout_falls_back_serial_then_quarantines(monkeypatch):
+    """A hung worker (simulated: every pool result times out) kills the
+    pool; files retry serially — good ones ingest, bad ones quarantine."""
+    import concurrent.futures as cf
+
+    class HungFuture:
+        def result(self, timeout=None):
+            raise cf.TimeoutError()
+
+    class HungPool:
+        def __init__(self, *a, **k):
+            self._probed = False
+
+        def submit(self, fn, *args):
+            if not self._probed:        # let the startup probe pass
+                self._probed = True
+                f = HungFuture()
+                f.result = lambda timeout=None: fn(*args)
+                return f
+            return HungFuture()
+
+        def shutdown(self, *a, **k):
+            pass
+
+    monkeypatch.setattr(cf, "ProcessPoolExecutor", HungPool)
+    items = [("good", TEXT), ("bad", corrupt_hlo(TEXT, "mangle_rg", seed=3))]
+    sess = TraceSession.from_hlo("s", items, MESH, max_workers=2,
+                                 errors="skip", retries=0, retry_backoff_s=0,
+                                 timeout_s=0.01)
+    assert sess.labels() == ["good"]
+    statuses = {r.source: r.status for r in sess.ingest_report.records}
+    assert statuses == {"good": "ok", "bad": "skipped"}
+
+
+# -- the watch daemon over the same chaos directory --------------------------
+
+def drain(daemon, max_polls=40):
+    for _ in range(max_polls):
+        ready, pending = daemon.poll_once()
+        if not ready and not pending:
+            return
+    raise AssertionError("directory never became quiescent")
+
+
+def test_daemon_survives_chaos_dir_and_reports_everything(chaos_dir):
+    d = WatchDaemon(WatchConfig(root=chaos_dir, mesh=MESH, settle_s=0.0,
+                                quiet=True, max_retries=1,
+                                retry_backoff_s=0.0))
+    drain(d)
+    recs = {os.path.basename(p): r for p, r in d._records.items()}
+    assert set(recs) == {os.path.basename(p) for p in _files(chaos_dir)}
+    assert recs["clean.txt"]["status"] == "ok"
+    assert d._traces[os.path.join(chaos_dir, "clean.txt")] \
+        .store.identical(CLEAN_TRACE.store)
+    assert recs["corrupt_binary.txt"]["status"] == "quarantined"
+    summ = d.summary()
+    assert summ["ingest"]["quarantined"] \
+        == [os.path.join(chaos_dir, "corrupt_binary.txt")]
+    for rec in summ["ingest"]["records"]:
+        if rec["status"] != "ok":
+            assert rec["error"]
+    # daemon state == batch salvage ingest over the same directory
+    batch = TraceSession.from_hlo("chaos", _files(chaos_dir), MESH,
+                                  max_workers=1, errors="salvage",
+                                  retries=0, retry_backoff_s=0)
+    sess = d.session()
+    assert sess.labels() == batch.labels()
+    for lab in batch.labels():
+        assert sess.get(lab).store.identical(batch.get(lab).store)
+
+
+def test_daemon_raise_mode_still_crashes(chaos_dir):
+    d = WatchDaemon(WatchConfig(root=chaos_dir, mesh=MESH, settle_s=0.0,
+                                quiet=True, errors="raise"))
+    with pytest.raises(Exception):
+        drain(d)
+
+
+# -- CLI: controlled exit codes over corrupt dumps ---------------------------
+
+def test_cli_ingest_salvage_exit_codes(chaos_dir, tmp_path, capsys):
+    out = str(tmp_path / "out" / "chaos.json")
+    rc = _main(["ingest", out, *_files(chaos_dir), "--workers", "1",
+                "--errors", "salvage", "--retries", "0",
+                "--retry-backoff", "0", "--json"])
+    assert rc == 3                                   # degraded, not fatal
+    rep = json.loads(capsys.readouterr().out)
+    assert {r["status"] for r in rep["records"]} \
+        >= {"ok", "salvaged", "quarantined"}
+    # the session was still written, with the report persisted inside
+    loaded = TraceSession.load(out)
+    assert loaded.ingest_report is not None
+    assert [r["source"] for r in loaded.ingest_report.to_dict()["records"]] \
+        == _files(chaos_dir)
+
+
+def test_cli_watch_once_survives_chaos(chaos_dir, tmp_path, capsys):
+    summary = str(tmp_path / "summary.json")
+    rc = _main(["watch", chaos_dir, "--once", "--settle", "0",
+                "--interval", "0.01", "--retry-backoff", "0",
+                "--summary", summary, "--quiet", "--fail-on", "critical"])
+    capsys.readouterr()
+    assert rc in (1, 3)     # alerts or degraded ingest — never a crash
+    summ = json.load(open(summary))
+    assert summ["ingest"]["quarantined"], "binary file must be quarantined"

@@ -350,3 +350,144 @@ def test_from_hlo_pool_startup_failure_falls_back_serial(monkeypatch):
     items = [(f"g{i}", synthetic_hlo(n_sites=30, seed=i)) for i in range(2)]
     sess = TraceSession.from_hlo("s", items, mesh, max_workers=2)
     assert sess.labels() == ["g0", "g1"]    # ingested serially, not dropped
+
+
+# -- ingest policy: errors=skip|salvage, retries, report persistence ---------
+
+def test_from_hlo_skip_drops_bad_inputs_and_records_them():
+    from repro.core.synth import synthetic_hlo
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    items = [("good", synthetic_hlo(n_sites=30, seed=1)), ("bad", None)]
+    sess = TraceSession.from_hlo("s", items, mesh, max_workers=1,
+                                 errors="skip", retries=0, retry_backoff_s=0)
+    assert sess.labels() == ["good"]
+    rep = sess.ingest_report
+    assert rep.errors == "skip" and not rep.ok
+    assert [(r.source, r.status) for r in rep.records] \
+        == [("good", "ok"), ("bad", "skipped")]
+    assert rep.degraded[0].error
+
+
+def test_from_hlo_salvage_recovers_partial_trace():
+    from repro.core.synth import corrupt_hlo, synthetic_hlo
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    good = synthetic_hlo(n_sites=40, seed=2)
+    bad = corrupt_hlo(good, "mangle_rg", seed=1)
+    sess = TraceSession.from_hlo("s", [("g", good), ("b", bad)], mesh,
+                                 max_workers=1, errors="salvage",
+                                 retries=0, retry_backoff_s=0)
+    assert sess.labels() == ["g", "b"]              # partial trace retained
+    rec = {r.source: r for r in sess.ingest_report.records}["b"]
+    assert rec.status == "salvaged" and rec.salvage["dropped"]
+    assert 0 < sess.get("b").store.n < sess.get("g").store.n
+
+
+def test_from_hlo_rejects_unknown_errors_policy():
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    with pytest.raises(ValueError, match="errors"):
+        TraceSession.from_hlo("s", [("a", "")], mesh, errors="ignore")
+
+
+def test_from_hlo_retry_rereads_flaky_file(tmp_path, monkeypatch):
+    """Transient failure (dump still landing): the retry re-reads the
+    file and succeeds, recorded as ok with the attempt count."""
+    import repro.core.session as sess_mod
+    from repro.core.synth import corrupt_hlo, synthetic_hlo
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    p = tmp_path / "flaky.txt"
+    p.write_text("placeholder")
+    good = synthetic_hlo(n_sites=30, seed=3)
+    bad = corrupt_hlo(good, "mangle_rg", seed=2)
+    reads = {"n": 0}
+
+    def fake_read(path):
+        reads["n"] += 1
+        return bad if reads["n"] == 1 else good
+
+    monkeypatch.setattr(sess_mod, "_read_text", fake_read)
+    sess = TraceSession.from_hlo("s", [str(p)], mesh, max_workers=1,
+                                 errors="skip", retries=2, retry_backoff_s=0)
+    rec = sess.ingest_report.records[0]
+    assert rec.status == "ok" and rec.attempts == 2
+    assert sess.labels() == ["flaky"]
+
+
+@pytest.mark.parametrize("ext", ["json", "npz"])
+def test_ingest_report_round_trips_through_save(tmp_path, ext):
+    from repro.core.synth import synthetic_hlo
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    items = [("good", synthetic_hlo(n_sites=30, seed=4)), ("bad", None)]
+    sess = TraceSession.from_hlo("s", items, mesh, max_workers=1,
+                                 errors="skip", retries=0, retry_backoff_s=0)
+    path = sess.save(str(tmp_path / f"s.{ext}"))
+    loaded = TraceSession.load(path)
+    assert loaded.ingest_report is not None
+    assert loaded.ingest_report.to_dict() == sess.ingest_report.to_dict()
+    # legacy payloads without a report still load
+    legacy = TraceSession("legacy", [rand_trace(0, 40)])
+    loaded2 = TraceSession.load(legacy.save(str(tmp_path / f"l.{ext}")))
+    assert loaded2.ingest_report is None
+
+
+# -- CLI ingest: the 0 / 3 / 2 exit-code contract ----------------------------
+
+def test_cli_ingest_exit_0_on_full_success(tmp_path, capsys):
+    from repro.core.session import _main
+    from repro.core.synth import synthetic_hlo
+    good = tmp_path / "good.txt"
+    good.write_text(synthetic_hlo(n_sites=30, seed=5))
+    rc = _main(["ingest", str(tmp_path / "s.json"), str(good),
+                "--workers", "1", "--errors", "salvage"])
+    capsys.readouterr()
+    assert rc == 0
+
+
+def test_cli_ingest_exit_3_when_degraded(tmp_path, capsys):
+    from repro.core.session import _main
+    from repro.core.synth import synthetic_hlo
+    good = tmp_path / "good.txt"
+    good.write_text(synthetic_hlo(n_sites=30, seed=5))
+    bad = tmp_path / "bad.txt"
+    bad.write_bytes(b"\xff\xfe not a module \xff")
+    out = str(tmp_path / "s.json")
+    rc = _main(["ingest", out, str(good), str(bad), "--workers", "1",
+                "--errors", "skip", "--retries", "0",
+                "--retry-backoff", "0"])
+    err = capsys.readouterr().err
+    assert rc == 3
+    assert "quarantined" in err and "bad.txt" in err
+    assert TraceSession.load(out).labels() == ["good"]   # still written
+
+
+def test_cli_ingest_exit_2_in_raise_mode(tmp_path, capsys):
+    from repro.core.session import _main
+    bad = tmp_path / "bad.txt"
+    bad.write_bytes(b"\xff\xfe not a module \xff")
+    rc = _main(["ingest", str(tmp_path / "s.json"), str(bad),
+                "--workers", "1"])
+    capsys.readouterr()
+    assert rc == 2
+
+
+# -- atomic_open: the rename itself is made durable --------------------------
+
+def test_atomic_open_fsyncs_parent_directory(tmp_path, monkeypatch):
+    """Pin the durability contract: after os.replace, the parent
+    directory fd is fsynced — without it a crash can lose the rename
+    even though the data blocks hit disk."""
+    import os
+    import stat
+    from repro.core import persist
+    synced_dir_fds = []
+    real_fsync = os.fsync
+
+    def spy(fd):
+        synced_dir_fds.append(stat.S_ISDIR(os.fstat(fd).st_mode))
+        return real_fsync(fd)
+
+    monkeypatch.setattr(os, "fsync", spy)
+    with persist.atomic_open(str(tmp_path / "x.json")) as f:
+        f.write("{}")
+    assert True in synced_dir_fds, \
+        "atomic_open must fsync the parent directory after the rename"
+    assert (tmp_path / "x.json").read_text() == "{}"

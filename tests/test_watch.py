@@ -238,3 +238,182 @@ def test_watch_cli_fail_on_alerts(tmp_path, capsys):
 def test_watch_cli_rejects_missing_dir(tmp_path, capsys):
     assert _main(["watch", str(tmp_path / "nope"), "--once"]) == 2
     assert "no such directory" in capsys.readouterr().err
+
+# -- fault tolerance: mtime skew, quarantine, crash-resume -------------------
+
+def test_watcher_clamps_future_mtime(tmp_path):
+    """NFS clock skew: a file touched into the future must still settle
+    — readiness is judged on signature stability, with the settle clock
+    clamped to the poll that first saw the signature."""
+    p = tmp_path / "skewed.txt"
+    p.write_text("x")
+    t0 = time.time()
+    os.utime(str(p), (t0 + 1e6, t0 + 1e6))
+    w = DirWatcher(str(tmp_path), settle_s=10.0)
+    assert w.poll(now=t0) == ([], 1)               # first sighting
+    ready, pending = w.poll(now=t0 + 5)
+    assert ready == [] and pending == 1            # stable but settling
+    ready, _ = w.poll(now=t0 + 11)                 # settle elapsed (clamped)
+    assert [os.path.basename(x) for x in ready] == ["skewed.txt"]
+
+
+def test_watcher_future_mtime_does_not_settle_early(tmp_path):
+    p = tmp_path / "skewed.txt"
+    p.write_text("x")
+    t0 = time.time()
+    os.utime(str(p), (t0 + 1e6, t0 + 1e6))
+    w = DirWatcher(str(tmp_path), settle_s=10.0)
+    w.poll(now=t0)
+    # without the first-observation clamp, now - mtime is hugely negative
+    # forever; with a *per-poll* clamp the signature would look reset
+    # each poll.  Either bug fails one of these two assertions.
+    assert w.poll(now=t0 + 1) == ([], 1)
+    ready, _ = w.poll(now=t0 + 12)
+    assert len(ready) == 1
+
+
+def test_daemon_quarantines_bad_file_then_recovers_on_change(tmp_path):
+    bad = tmp_path / "bad.txt"
+    bad.write_bytes(b"\xff\xfe not utf-8 \xff")
+    d = mk_daemon(tmp_path, max_retries=2, retry_backoff_s=0.0)
+    drain(d)
+    rec = d._records[str(bad)]
+    assert rec["status"] == "quarantined" and rec["error"]
+    assert str(bad) in d._quarantine
+    assert d.session().labels() == []
+    assert d.degraded() == [str(bad)]
+    # the writer finishes the dump: new signature reopens the quarantine
+    bad.write_text(synthetic_hlo(n_sites=40, seed=8))
+    drain(d)
+    assert d._records[str(bad)]["status"] == "ok"
+    assert str(bad) not in d._quarantine
+    assert d.session().labels() == ["bad"]
+
+
+def test_daemon_quarantine_backoff_gates_same_signature_retries(tmp_path):
+    bad = tmp_path / "bad.txt"
+    bad.write_bytes(b"\xff\xfe not utf-8 \xff")
+    d = mk_daemon(tmp_path, max_retries=3, retry_backoff_s=1e6)
+    d.poll_once()
+    d.poll_once()      # first attempt fails -> quarantined, huge backoff
+    q0 = dict(d._quarantine[str(bad)])
+    assert q0["failures"] == 1
+    for _ in range(3):
+        ingested, pending = d.poll_once()
+        assert ingested == [] and pending >= 1     # gated, not retried
+    assert d._quarantine[str(bad)]["failures"] == 1
+
+
+def test_daemon_checkpoint_resume_reparses_nothing(tmp_path):
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=3, sites_per_file=90, seed=21)
+    ckpt = str(tmp_path / "watch.npz")
+    d1 = mk_daemon(root, checkpoint=ckpt)
+    drain(d1)
+    assert d1.parse_count == 3 and os.path.exists(ckpt)
+    report1 = d1.session().report(fmt="json")
+
+    d2 = mk_daemon(root, checkpoint=ckpt)
+    drain(d2)
+    assert d2.parse_count == 0                     # zero re-parses
+    assert d2.rounds >= d1.rounds                  # round counter resumed
+    sess1, sess2 = d1.session(), d2.session()
+    assert sess2.labels() == sess1.labels()
+    for a, b in zip(sess1, sess2):
+        assert a.store.identical(b.store)
+    assert sess2.report(fmt="json") == report1
+    assert [f.to_dict() for f in d2.findings()] \
+        == [f.to_dict() for f in d1.findings()]
+
+    # new files after resume are the only thing parsed
+    write_hlo_dump(str(root), n_files=1, sites_per_file=90, seed=21, start=3)
+    drain(d2)
+    assert d2.parse_count == 1
+    ref = batch_session(root)
+    assert d2.session().report(fmt="json") == ref.report(fmt="json")
+
+
+def test_daemon_checkpoint_survives_quarantine_state(tmp_path):
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=1, sites_per_file=60, seed=2)
+    (root / "bad.txt").write_bytes(b"\xff\xfe nope \xff")
+    ckpt = str(tmp_path / "watch.npz")
+    d1 = mk_daemon(root, checkpoint=ckpt, max_retries=1, retry_backoff_s=0.0)
+    drain(d1)
+    assert d1._records[str(root / "bad.txt")]["status"] == "quarantined"
+
+    d2 = mk_daemon(root, checkpoint=ckpt, max_retries=1, retry_backoff_s=0.0)
+    drain(d2)
+    assert d2.parse_count == 0                     # bad file not re-offered
+    assert d2._records[str(root / "bad.txt")]["status"] == "quarantined"
+    assert d2.summary()["ingest"]["quarantined"] == [str(root / "bad.txt")]
+
+
+def test_daemon_ignores_unusable_checkpoint(tmp_path):
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=1, sites_per_file=50, seed=4)
+    ckpt = tmp_path / "watch.npz"
+    ckpt.write_text("not an npz at all")
+    d = mk_daemon(root, checkpoint=str(ckpt))
+    drain(d)                                       # fresh start, no crash
+    assert d.parse_count == 1
+    import numpy as np
+    with np.load(str(ckpt)) as arrs:               # checkpoint rewritten
+        assert "watch" in arrs
+
+
+def test_daemon_sigkill_resume_matches_batch(tmp_path):
+    """The acceptance drill: SIGKILL the daemon mid-run, restart on the
+    same checkpoint, drain with --once — the final report must be
+    byte-identical to batch ingest + report, with only post-kill files
+    parsed by the resumed process."""
+    import json as json_mod
+    import signal
+    import subprocess
+    import sys as sys_mod
+
+    root = tmp_path / "dump"
+    write_hlo_dump(str(root), n_files=2, sites_per_file=80, seed=31)
+    ckpt = str(tmp_path / "watch.npz")
+    summary = str(tmp_path / "summary.json")
+    report = str(tmp_path / "report.json")
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    proc = subprocess.Popen(
+        [sys_mod.executable, "-m", "repro.core.session", "watch", str(root),
+         "--settle", "0", "--interval", "0.05", "--quiet",
+         "--checkpoint", ckpt, "--summary", summary],
+        env=env, stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL)
+    try:
+        deadline = time.time() + 60
+        while time.time() < deadline:
+            if os.path.exists(summary):
+                try:
+                    s = json_mod.load(open(summary))
+                except ValueError:
+                    s = {}
+                if s.get("files") == 2 and os.path.exists(ckpt):
+                    break
+            time.sleep(0.05)
+        else:
+            raise AssertionError("daemon never ingested the seed files")
+    finally:
+        proc.send_signal(signal.SIGKILL)
+        proc.wait()
+
+    # directory keeps growing while the daemon is dead
+    write_hlo_dump(str(root), n_files=1, sites_per_file=80, seed=31, start=2)
+    rc = subprocess.run(
+        [sys_mod.executable, "-m", "repro.core.session", "watch", str(root),
+         "--once", "--settle", "0", "--interval", "0.05", "--quiet",
+         "--checkpoint", ckpt, "--summary", summary,
+         "--report-json", report, "--fail-on", "critical"],
+        env=env).returncode
+    assert rc == 0
+    s = json_mod.load(open(summary))
+    assert s["files"] == 3
+    assert s["ingest"]["parse_count"] == 1         # only the new file
+    ref = batch_session(root)
+    with open(report) as f:
+        assert f.read() == ref.report(fmt="json") + "\n"
