@@ -1,0 +1,130 @@
+#!/usr/bin/env python
+"""Docs gate: markdown links must resolve, USAGE.md examples must run.
+
+Two checks, both from the repo root:
+
+1. **Intra-repo links** — every relative `[text](target)` in every
+   tracked `*.md` file must point at an existing file (anchors are
+   stripped; `http(s)://` and `mailto:` targets are skipped).
+2. **Executable examples** — every line beginning with `session ` inside
+   a fenced code block of USAGE.md is executed as
+   `python -m repro.core.session ...` (PYTHONPATH=src) and must exit 0.
+   A trailing `# exit=N` comment declares an intended nonzero exit
+   (e.g. the documented error-path examples).
+
+Exit 1 on any failure, with one line per problem.  This is the CI
+`docs` job and part of `TIER=smoke scripts/test.sh`, so the user guide
+cannot drift from the CLI it documents.
+"""
+import os
+import re
+import shlex
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^\s*(```|~~~)")
+EXIT_RE = re.compile(r"#\s*exit=(\d+)\s*$")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if not d.startswith(".") and d not in
+                       ("__pycache__", "results", "node_modules")]
+        out += [os.path.join(dirpath, f) for f in filenames
+                if f.endswith(".md")]
+    return sorted(out)
+
+
+def check_links():
+    problems = []
+    for path in md_files():
+        with open(path, encoding="utf-8") as f:
+            lines = f.readlines()
+        fenced = False
+        for ln, line in enumerate(lines, 1):
+            if FENCE_RE.match(line):
+                fenced = not fenced
+                continue
+            if fenced:
+                continue
+            for target in LINK_RE.findall(line):
+                if target.startswith(SKIP_PREFIXES):
+                    continue
+                rel = target.split("#", 1)[0]
+                if not rel:
+                    continue
+                resolved = os.path.normpath(
+                    os.path.join(os.path.dirname(path), rel))
+                if not os.path.exists(resolved):
+                    problems.append(
+                        f"{os.path.relpath(path, ROOT)}:{ln}: "
+                        f"broken link -> {target}")
+    return problems
+
+
+def usage_commands():
+    """(lineno, argv-after-`session`, expected-exit) per fenced example."""
+    path = os.path.join(ROOT, "USAGE.md")
+    cmds = []
+    fenced = False
+    with open(path, encoding="utf-8") as f:
+        for ln, line in enumerate(f, 1):
+            if FENCE_RE.match(line):
+                fenced = not fenced
+                continue
+            s = line.strip()
+            if not fenced or not s.startswith("session "):
+                continue
+            expect = 0
+            m = EXIT_RE.search(s)
+            if m:
+                expect = int(m.group(1))
+                s = s[:m.start()].rstrip()
+            cmds.append((ln, shlex.split(s)[1:], expect))
+    return cmds
+
+
+def run_examples():
+    problems = []
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + (os.pathsep + env["PYTHONPATH"]
+                                 if env.get("PYTHONPATH") else "")
+    cmds = usage_commands()
+    if not cmds:
+        return ["USAGE.md: no fenced `session ...` examples found"]
+    for ln, argv, expect in cmds:
+        proc = subprocess.run(
+            [sys.executable, "-m", "repro.core.session"] + argv,
+            cwd=ROOT, env=env, stdout=subprocess.PIPE,
+            stderr=subprocess.PIPE, text=True, timeout=600)
+        if proc.returncode != expect:
+            tail = (proc.stderr or proc.stdout).strip().splitlines()
+            problems.append(
+                f"USAGE.md:{ln}: `session {' '.join(argv)}` exited "
+                f"{proc.returncode} (expected {expect})"
+                + (f" — {tail[-1]}" if tail else ""))
+        else:
+            print(f"docs_check: ok (exit {proc.returncode}) "
+                  f"session {' '.join(argv)}")
+    return problems
+
+
+def main():
+    problems = check_links()
+    problems += run_examples()
+    for p in problems:
+        print(f"docs_check: FAIL {p}", file=sys.stderr)
+    n_links = sum(1 for _ in md_files())
+    if not problems:
+        print(f"docs_check: PASS ({n_links} markdown files link-checked, "
+              f"{len(usage_commands())} USAGE.md examples executed)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -18,7 +18,8 @@ if [ "${TIER:-full}" = "smoke" ]; then
         tests/test_ingest.py tests/test_render.py tests/test_report.py \
         tests/test_session.py tests/test_detect.py tests/test_tracer.py \
         tests/test_shard.py tests/test_commcheck.py tests/test_append.py \
-        tests/test_watch.py tests/test_chaos.py \
+        tests/test_watch.py tests/test_chaos.py tests/test_whatif.py \
+        tests/test_cli_help.py \
         "$@"
     rc=$?
     if [ "$rc" -ne 0 ]; then
@@ -26,6 +27,11 @@ if [ "${TIER:-full}" = "smoke" ]; then
     fi
     python -m repro.core.session lint examples/hlo/*.txt \
         --mesh 2,4 --axes data,model --fail-on critical || exit $?
+    # what-if smoke: hardwareless config sweep over an example dump
+    python -m repro.core.session whatif examples/hlo/mlp_sweep_a.txt \
+        --mesh 2,4 --axes data,model || exit $?
+    # docs gate: markdown links resolve, USAGE.md examples execute
+    python scripts/docs_check.py || exit $?
     # live-profiling smoke: drain a synthetic dump dir in --once mode
     rm -rf results/watch_smoke
     python -c "import sys; sys.path.insert(0, 'src'); \

@@ -7,12 +7,14 @@ from repro.core.store import TraceStore
 from repro.core.topology import Hardware, MeshSpec, V5E
 from repro.core.tracer import trace_compiled, trace_from_hlo, trace_step
 from repro.core.roofline import RooflineReport, roofline
+from repro.core.whatif import Scenario, reannotate, sweep
 
 __all__ = [
     "CollectiveEvent", "Trace", "TraceStore", "TraceSession",
     "Hardware", "MeshSpec", "V5E",
     "trace_compiled", "trace_from_hlo", "trace_step",
     "RooflineReport", "roofline",
+    "Scenario", "reannotate", "sweep",
 ]
 
 

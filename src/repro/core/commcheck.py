@@ -82,6 +82,50 @@ def _risk(store: TraceStore, rows: np.ndarray) -> Dict[str, float]:
     }
 
 
+# fix advice per finding code.  Static findings are correctness bugs, so
+# the quantification is the modeled step time the implicated collectives
+# account for (`time_at_risk_s`) — what the fix unblocks — rather than a
+# counterfactual re-pricing (`whatif` quantifies the dynamic detectors).
+_ADVICE: Dict[str, str] = {
+    "device_out_of_range": "fix the replica groups to index devices that "
+                           "exist in the mesh",
+    "group_overlap": "make the replica groups of each collective disjoint",
+    "degenerate_group": "delete the collective or widen its groups — "
+                        "size-1 groups move no data",
+    "group_mesh_mismatch": "retile the replica groups so each evenly "
+                           "covers the mesh axes it spans",
+    "group_coverage": "include every device in a replica group (SPMD runs "
+                      "the op on all ranks)",
+    "channel_collision": "give each collective instance its own channel id",
+    "shape_mismatch": "make matched participants agree on payload "
+                      "shape/dtype",
+    "deadlock_order": "align the collective call order across ranks",
+    "permute_dup_target": "route at most one source to each permute target",
+    "permute_dup_source": "check the intended ring/shift pattern "
+                          "(multicast source)",
+    "permute_self_loop": "drop the self-loop pairs — they move no data",
+    "pspec_dup_axis": "use each mesh axis in at most one dim of the spec",
+    "pspec_unknown_axis": "name only axes the mesh defines",
+    "pspec_indivisible": "pad the dim or pick axes whose product divides it",
+    "pspec_unsharded_dim": "shard the dominant dim over the idle axes",
+}
+
+
+def _advise(findings: List[Finding]) -> List[Finding]:
+    """Attach the fix advice + unblocked-time figure to each finding."""
+    from repro.core.whatif import fmt_time
+    for f in findings:
+        if f.recommendation:
+            continue
+        advice = _ADVICE.get(f.detector)
+        if advice is None:
+            continue
+        f.est_saved_s = f.time_at_risk_s
+        f.recommendation = advice if f.time_at_risk_s == 0 else \
+            f"{advice} — unblocks est {fmt_time(f.time_at_risk_s)}/step"
+    return findings
+
+
 def _first_row_per_code(codes: np.ndarray, rows: np.ndarray,
                         n_codes: int) -> np.ndarray:
     """First row index using each code (-1 = unused), one reverse scatter."""
@@ -537,7 +581,7 @@ def lint_pspecs(pspecs, axis_sizes: Dict[str, int], shapes=None, *,
                     f"PartitionSpec{tuple(entries)} is unsharded while mesh "
                     f"axis(es) {sorted(idle)} sit idle — shard it or accept "
                     f"the replicated memory/traffic", **kw))
-    return out
+    return _advise(out)
 
 
 def findings_json(findings: Sequence[Finding]) -> List[Dict[str, object]]:
@@ -551,9 +595,9 @@ def findings_json(findings: Sequence[Finding]) -> List[Dict[str, object]]:
 
 def check_store(store: TraceStore, mesh: MeshSpec) -> List[Finding]:
     """All trace-level families over one columnar store (unranked)."""
-    return (check_replica_groups(store, mesh)
-            + check_matches(store, mesh)
-            + check_permutes(store, mesh))
+    return _advise(check_replica_groups(store, mesh)
+                   + check_matches(store, mesh)
+                   + check_permutes(store, mesh))
 
 
 def check_trace(trace: Trace, mesh: Optional[MeshSpec] = None,
@@ -732,4 +776,4 @@ class CommcheckState:
             kw = dict(wasted_bytes=st["wb"], time_at_risk_s=st["ts"],
                       site=st["first"][1])
             out += _permute_table_findings(pairs, nd, st["sites"], kw)
-        return rank_findings(out)
+        return rank_findings(_advise(out))

@@ -103,6 +103,14 @@ def annotate_store(store, mesh: MeshSpec, hw: Hardware) -> None:
     `kind` codes via masks.  Field-for-field (bit-for-bit on the float
     columns) equivalent to running `annotate_event` over `store.rows()` —
     pinned by tests/test_ingest.py.
+
+    Contract: annotation *rebinds, never mutates*.  Derived columns
+    (`link_class`, `protocol`, `wire_bytes_per_dev`, `est_time_s`, axes)
+    are assigned as fresh arrays/Categoricals; the input columns they are
+    computed from are only read.  `repro.core.whatif` relies on this to
+    re-annotate a `TraceStore.annotation_clone()` (which shares row data
+    by reference) under counterfactual meshes/hardware without touching
+    the baseline store.
     """
     from repro.core.store import Categorical, build_remap
 

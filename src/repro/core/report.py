@@ -347,16 +347,18 @@ def iter_html(trace: Trace, mesh: MeshSpec,
         yield "<pre>no findings — collective structure checks clean</pre>"
     else:
         rows = ["<table><tr><th>severity</th><th>code</th><th>site</th>"
-                "<th>MB at risk</th><th class='l'>message</th></tr>"]
+                "<th>MB at risk</th><th class='l'>message</th>"
+                "<th class='l'>recommendation</th></tr>"]
         for f in findings[:50]:
             rows.append(
                 f"<tr><td>{html_mod.escape(f.severity)}</td>"
                 f"<td class='l'>{html_mod.escape(f.detector)}</td>"
                 f"<td class='l'>{html_mod.escape(f.site)}</td>"
                 f"<td>{f.wasted_bytes/1e6:.2f}</td>"
-                f"<td class='l'>{html_mod.escape(f.message)}</td></tr>")
+                f"<td class='l'>{html_mod.escape(f.message)}</td>"
+                f"<td class='l'>{html_mod.escape(f.recommendation)}</td></tr>")
         if len(findings) > 50:
-            rows.append(f"<tr><td colspan='5' class='l'>... "
+            rows.append(f"<tr><td colspan='6' class='l'>... "
                         f"({len(findings) - 50} more)</td></tr>")
         rows.append("</table>")
         yield "".join(rows)

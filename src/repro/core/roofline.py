@@ -148,6 +148,50 @@ def kernel_adjusted(rf: RooflineReport, trace: Trace, scope_pattern: str,
     )
 
 
+def scenario_adjusted(rf: RooflineReport, result) -> RooflineReport:
+    """Roofline with the collective term swapped for a what-if scenario's.
+
+    `result` is a `whatif.ScenarioResult` over the same trace: compute
+    and memory terms are untouched (a re-annotation moves no FLOPs or
+    HBM bytes), the collective term and wire bytes come from the
+    scenario's re-priced annotation.  The `kernel_adjusted` sibling for
+    topology/protocol counterfactuals instead of Pallas kernels.
+    """
+    return RooflineReport(
+        label=rf.label + "@" + result.scenario.name,
+        chips=rf.chips,
+        compute_s=rf.compute_s,
+        memory_s=rf.memory_s,
+        collective_s=result.est_s,
+        hlo_flops=rf.hlo_flops,
+        hlo_bytes=rf.hlo_bytes,
+        collective_bytes=result.wire,
+        model_flops=rf.model_flops,
+        per_device_memory_bytes=rf.per_device_memory_bytes,
+    )
+
+
+def scenario_overlay_table(rf: RooflineReport, results, top: int = 3) -> str:
+    """Baseline-vs-scenarios roofline rows for dryrun output.
+
+    One row per scenario (ranked best first, `top` shown): the modeled
+    collective term under the scenario, the resulting bound, and the
+    step speedup vs the baseline roofline.
+    """
+    lines = [f"{'configuration':36s} {'collective':>11s} {'bound':>11s} "
+             f"{'dominant':>10s} {'speedup':>8s}"]
+    lines.append(f"{rf.label:36s} {rf.collective_s*1e3:10.2f}m "
+                 f"{rf.bound_s*1e3:10.2f}m {rf.dominant:>10s} "
+                 f"{'1.00x':>8s}")
+    for r in results[:top]:
+        adj = scenario_adjusted(rf, r)
+        speed = rf.bound_s / adj.bound_s if adj.bound_s else float("inf")
+        lines.append(f"{adj.label:36s} {adj.collective_s*1e3:10.2f}m "
+                     f"{adj.bound_s*1e3:10.2f}m {adj.dominant:>10s} "
+                     f"{speed:7.2f}x")
+    return "\n".join(lines)
+
+
 def scope_breakdown(trace: Trace, top: int = 12) -> str:
     """Per-scope bytes/FLOPs table (profiling view for the perf loop)."""
     stats = trace.op_stats

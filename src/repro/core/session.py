@@ -40,6 +40,9 @@ CLI:
                                         [--fail-on critical|warn|info|never]
     python -m repro.core.session detect PATH [LABEL] [--json] \\
                                         [--fail-on critical|warn|info|never]
+    python -m repro.core.session whatif PATH [LABEL] [--mesh 2,4] \\
+                                        [--axes data,model] [--top N] \\
+                                        [--json]
 
 `lint` runs the static analyzer (`commcheck`) over saved sessions
 (.json/.npz) or raw HLO text files (ingested with --mesh/--axes);
@@ -47,6 +50,14 @@ CLI:
 same stable finding schema under --json and exit 1 when any finding
 reaches the --fail-on severity (default: critical for lint, never for
 detect), 2 on input errors.
+
+`whatif` is the hardwareless config sweep (`repro.core.whatif`): it
+re-prices one trace under a grid of counterfactual scenarios — mesh
+axis permutations, rendezvous-threshold tiers, link bandwidth/latency
+tiers — by re-running the columnar annotation pass (no re-parse, no
+hardware), and ranks the scenarios by estimated step time saved.
+Accepts a saved session or a raw HLO text file; exits 0 on success,
+2 on input errors.
 
 `watch` is the live-profiling daemon (see `repro.core.watch`): it tails
 an HLO dump directory, ingests new/changed files incrementally
@@ -675,9 +686,14 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
 
     p = sub.add_parser("demo", help="build, save, reload and compare a "
                                     "3-config synthetic sweep")
-    p.add_argument("--out", default="results/session_demo.json")
-    p.add_argument("--format", choices=("json", "npz"), default=None)
-    p.add_argument("--sites", type=int, default=2000)
+    p.add_argument("--out", default="results/session_demo.json",
+                   help="save path (default results/session_demo.json)")
+    p.add_argument("--format", choices=("json", "npz"), default=None,
+                   help="force the session format, overriding the --out "
+                        "extension")
+    p.add_argument("--sites", type=int, default=2000,
+                   help="synthetic collective sites per trace "
+                        "(default 2000)")
 
     p = sub.add_parser(
         "ingest",
@@ -698,7 +714,10 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                    help="mesh shape, comma-separated (default 2,4)")
     p.add_argument("--axes", default="data,model",
                    help="mesh axis names, comma-separated")
-    p.add_argument("--workers", type=int, default=None)
+    p.add_argument("--workers", type=int, default=None,
+                   help="worker processes for the per-file fan-out "
+                        "(default: one per file, capped at CPU count; "
+                        "1 = serial)")
     p.add_argument("--shards", type=int, default=None,
                    help="split each single module per-computation across "
                         "this many parse shards (default: auto above "
@@ -785,19 +804,23 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                         "without re-parsing already-ingested files")
 
     p = sub.add_parser("show", help="per-trace summaries of a saved session")
-    p.add_argument("path")
+    p.add_argument("path", help="saved session (.json or .npz)")
 
     p = sub.add_parser("table", help="n-way comparison table")
-    p.add_argument("path")
+    p.add_argument("path", help="saved session (.json or .npz)")
     p.add_argument("--by", choices=("kind_link", "semantic", "site"),
-                   default="kind_link")
+                   default="kind_link",
+                   help="rollup key; 'site' breaks out per compiled "
+                        "callsite (op_name x kind x axes)")
     p.add_argument("--metric", choices=("bytes", "time", "count"),
-                   default="bytes")
+                   default="bytes",
+                   help="cell metric: operand bytes, modeled est time, "
+                        "or collective count per step (default bytes)")
 
     p = sub.add_parser("diff", help="pairwise deep-dive between two labels")
-    p.add_argument("path")
-    p.add_argument("label_a")
-    p.add_argument("label_b")
+    p.add_argument("path", help="saved session (.json or .npz)")
+    p.add_argument("label_a", help="baseline trace label")
+    p.add_argument("label_b", help="candidate trace label (deltas are B-A)")
     p.add_argument("--by", choices=("kind_link", "semantic", "site"),
                    default="kind_link",
                    help="alignment key; 'site' aligns per compiled callsite "
@@ -828,7 +851,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
 
     p = sub.add_parser("detect", help="dynamic performance detectors over "
                                       "a saved session")
-    p.add_argument("path")
+    p.add_argument("path", help="saved session (.json or .npz)")
     p.add_argument("label", nargs="?", default=None,
                    help="trace label (default: all traces)")
     p.add_argument("--json", action="store_true", dest="as_json",
@@ -840,16 +863,50 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                         "(default: never — detectors are advisory)")
 
     p = sub.add_parser("report", help="render one trace of a session as "
-                                      "JSON or a self-contained HTML page")
-    p.add_argument("path")
+                                      "JSON or a self-contained HTML page",
+                       epilog="the report carries the full per-trace "
+                              "rollups and findings; for interactive "
+                              "per-callsite views use `table --by site` "
+                              "and `diff --by site`")
+    p.add_argument("path", help="saved session (.json or .npz)")
     p.add_argument("label", nargs="?", default=None,
                    help="trace label (default: the session's first trace)")
-    p.add_argument("--format", choices=("json", "html"), default="json")
+    p.add_argument("--format", choices=("json", "html"), default="json",
+                   help="output format (default json)")
     p.add_argument("--out", default=None, help="output file (default stdout)")
     p.add_argument("--stream", action="store_true",
                    help="stream through the chunked columnar emitters "
                         "(bounded memory for very large traces)")
-    p.add_argument("--chunk-sites", type=int, default=8192)
+    p.add_argument("--chunk-sites", type=int, default=8192,
+                   help="sites per chunk when streaming (default 8192)")
+
+    p = sub.add_parser(
+        "whatif",
+        help="hardwareless config sweep: re-price a trace under "
+             "counterfactual meshes/thresholds and rank the savings",
+        description="Re-annotate one trace under a grid of what-if "
+                    "scenarios (mesh axis permutations, rendezvous "
+                    "threshold tiers, link bandwidth/latency tiers) "
+                    "without re-parsing or hardware, and rank scenarios "
+                    "by estimated step time saved vs the baseline. "
+                    "Exit codes: 0 on success, 2 on input errors.")
+    p.add_argument("path", help="saved session (.json/.npz) or HLO text "
+                                "file")
+    p.add_argument("label", nargs="?", default=None,
+                   help="trace label (default: the session's first trace; "
+                        "ignored for HLO inputs)")
+    p.add_argument("--mesh", default="2,4",
+                   help="mesh shape for HLO inputs, comma-separated "
+                        "(saved sessions carry their own mesh)")
+    p.add_argument("--axes", default="data,model",
+                   help="mesh axis names for HLO inputs, comma-separated")
+    p.add_argument("--top", type=int, default=5,
+                   help="top per-site savings kept per scenario "
+                        "(default 5)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the machine-readable sweep (baseline + "
+                        "every scenario, ranked by time saved) instead "
+                        "of the table")
 
     args = ap.parse_args(argv)
 
@@ -964,6 +1021,44 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                 print(f"error: cannot lint {path} ({e!r})", file=sys.stderr)
                 return 2
         return _emit_findings(results, args.as_json, args.fail_on)
+
+    if args.cmd == "whatif":
+        from repro.core import whatif as whatif_mod
+        try:
+            if args.path.endswith((".json", ".npz")):
+                sess = TraceSession.load(args.path)
+                if not len(sess):
+                    print(f"error: session {sess.name!r} has no traces",
+                          file=sys.stderr)
+                    return 2
+                tr = sess.get(args.label) if args.label else list(sess)[0]
+            else:
+                shape = tuple(int(x) for x in args.mesh.split(","))
+                axes = tuple(args.axes.split(","))
+                if len(shape) != len(axes):
+                    print("error: --mesh and --axes must have the same rank",
+                          file=sys.stderr)
+                    return 2
+                from repro.core.tracer import trace_from_hlo
+                with open(args.path) as f:
+                    text = f.read()
+                label = os.path.splitext(os.path.basename(args.path))[0]
+                tr = trace_from_hlo(text, MeshSpec(shape, axes), label=label)
+        except FileNotFoundError:
+            print(f"error: no such file: {args.path}", file=sys.stderr)
+            return 2
+        except (KeyError, ValueError, json.JSONDecodeError) as e:
+            print(f"error: cannot sweep {args.path} ({e!r})",
+                  file=sys.stderr)
+            return 2
+        mesh = MeshSpec(tr.mesh_shape, tr.mesh_axes)
+        results = whatif_mod.sweep(tr.store, mesh, top=args.top)
+        if args.as_json:
+            print(json.dumps(
+                whatif_mod.sweep_to_dict(results, tr.label, mesh), indent=1))
+        else:
+            print(whatif_mod.render_sweep(results, tr.label))
+        return 0
 
     try:
         sess = TraceSession.load(args.path)

@@ -484,6 +484,26 @@ class TraceStore:
                 == [tuple(a) for a in other.axes_tables]
                 and np.array_equal(self.axes_code, other.axes_code))
 
+    def annotation_clone(self) -> "TraceStore":
+        """A scratch copy sharing this store's row data by reference.
+
+        `costmodel.annotate_store` *rebinds* the annotation columns
+        (`link_class`, `protocol`, `wire_bytes_per_device`, `est_time_s`,
+        and the axes payload via `set_axes`) — it never writes into the
+        existing arrays.  Re-annotating a clone under an alternate
+        mesh/hardware therefore leaves this store untouched: that is the
+        what-if engine's baseline-never-mutated invariant (pinned by
+        tests/test_whatif.py).  The clone must not be appended to or
+        edited row-wise — the payload tables and name list are aliased.
+        """
+        num = {col: getattr(self, col) for col, _dt in _NUM_COLS}
+        cat = {col: getattr(self, col) for col in _CAT_COLS}
+        return TraceStore(
+            self.n, num, cat, names=self.names,
+            group_tables=self.group_tables, group_code=self.group_code,
+            stp_tables=self.stp_tables, stp_code=self.stp_code,
+            axes_tables=self.axes_tables, axes_code=self.axes_code)
+
     # ---- per-row compatibility views ---------------------------------------
 
     @property

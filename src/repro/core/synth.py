@@ -187,6 +187,28 @@ def inject_comm_bugs(mesh: Optional[MeshSpec] = None, hw: Hardware = V5E,
     return trace, {b: COMM_BUGS[b] for b in bugs}
 
 
+def misconfigured_trace(n_sites: int = 400, seed: int = 3
+                        ) -> Tuple[Trace, MeshSpec, str]:
+    """A workload whose mesh factorization is the (planted) bug.
+
+    Every collective spans the first axis of a `(2, 8) ("pod", "data")`
+    mesh — bulk grad-sync traffic riding the slow inter-pod DCI.  The
+    same device groups stay inside one ICI axis under the transposed
+    factorization `(8, 2) ("data", "pod")` (device ids 0 and 8 are pod
+    neighbors under the first mapping but data neighbors under the
+    second), so the fix is purely a mesh reshape: no payload changes,
+    ~2x modeled step time back.
+
+    Returns `(trace, mesh, fix)` where `fix` is the scenario name
+    `whatif.default_scenarios(mesh)` gives that reshape — a sweep must
+    rank it first (the ground truth for tests and the docs example).
+    """
+    mesh = MeshSpec((2, 8), ("pod", "data"))
+    trace = synthetic_trace("misconfigured", mesh, n_sites=n_sites,
+                            seed=seed, axis_weights=(1.0, 0.0))
+    return trace, mesh, "mesh:data,pod"
+
+
 # --------------------------------------------------------------------------
 # synthetic HLO text — ingest-pipeline workloads (parse -> annotate -> store)
 # --------------------------------------------------------------------------

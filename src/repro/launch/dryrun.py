@@ -246,6 +246,10 @@ def run_cli():
     ap.add_argument("--html", default=None, help="write HTML trace report dir")
     ap.add_argument("--tables", action="store_true",
                     help="print top-contenders + semantic tables")
+    ap.add_argument("--whatif", action="store_true",
+                    help="sweep the default what-if scenario grid over each "
+                         "compiled trace and print a baseline-vs-best "
+                         "roofline overlay (core.whatif, hardwareless)")
     ap.add_argument("--accum", type=int, default=None)
     ap.add_argument("--remat", default=None)
     ap.add_argument("--grad-compression", default=None)
@@ -294,6 +298,21 @@ def run_cli():
                 if args.tables:
                     print(top_contenders_table(tr))
                     print(semantic_table(tr))
+                if args.whatif:
+                    from repro.core import whatif
+                    from repro.core.roofline import scenario_overlay_table
+                    spec = make_mesh_spec(multi_pod=mp)
+                    results = whatif.sweep(tr.store, spec)
+                    rf = roofline(tr, model_flops=r["model_gflops"] * 1e9)
+                    print(scenario_overlay_table(rf, results))
+                    best = results[0] if results else None
+                    if best is not None and best.saved_s > 0:
+                        print(f"      best config: {best.scenario.name} "
+                              f"saves {whatif.fmt_time(best.saved_s)}/step "
+                              f"({best.speedup:.2f}x collective) — "
+                              f"{best.scenario.description}")
+                        r["whatif_best"] = best.scenario.name
+                        r["whatif_saved_ms"] = round(best.saved_s * 1e3, 3)
                 if args.html:
                     os.makedirs(args.html, exist_ok=True)
                     name = f"{arch}_{shape_name}_{r['mesh']}"

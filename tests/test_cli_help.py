@@ -1,0 +1,67 @@
+"""CLI --help regression pins: every subcommand's help matches behavior.
+
+argparse exits 0 on --help, so each case runs `_main` under
+`pytest.raises(SystemExit)` and asserts on the captured help text.
+"""
+import pytest
+
+from repro.core.session import _main
+
+
+def _help_of(argv, capsys):
+    with pytest.raises(SystemExit) as ei:
+        _main(argv + ["--help"])
+    assert ei.value.code == 0
+    return capsys.readouterr().out
+
+
+def test_top_level_lists_every_subcommand(capsys):
+    out = _help_of([], capsys)
+    for cmd in ("demo", "ingest", "watch", "show", "table", "diff",
+                "lint", "detect", "report", "whatif"):
+        assert cmd in out
+
+
+def test_report_help_mentions_by_site_views(capsys):
+    # regression: the epilog omitted the per-site mode
+    out = _help_of(["report"], capsys)
+    assert "--by site" in out
+    assert "--stream" in out and "--chunk-sites" in out
+
+
+def test_whatif_help_documents_sweep_contract(capsys):
+    out = _help_of(["whatif"], capsys)
+    assert "--json" in out and "--top" in out
+    assert "--mesh" in out and "--axes" in out
+    assert "2 on input errors" in out
+
+
+def test_ingest_help_documents_exit_codes(capsys):
+    out = _help_of(["ingest"], capsys)
+    for flag in ("--errors", "--retries", "--retry-backoff", "--timeout",
+                 "--workers", "--shards", "--json"):
+        assert flag in out
+    assert "salvage" in out and "quarantined" in out
+
+
+def test_watch_help_documents_daemon_flags(capsys):
+    out = _help_of(["watch"], capsys)
+    for flag in ("--fail-on", "--checkpoint", "--errors", "--once",
+                 "--settle", "--interval", "--max-rounds"):
+        assert flag in out
+    assert "crash-resume" in out
+
+
+def test_lint_and_detect_share_fail_on_contract(capsys):
+    lint = _help_of(["lint"], capsys)
+    det = _help_of(["detect"], capsys)
+    for out in (lint, det):
+        assert "--fail-on" in out and "--json" in out
+    assert "critical" in lint     # lint default
+    assert "never" in det         # detect default: advisory
+
+
+def test_table_and_diff_document_site_mode(capsys):
+    for cmd in ("table", "diff"):
+        out = _help_of([cmd], capsys)
+        assert "site" in out

@@ -311,7 +311,8 @@ def test_cli_lint_json_schema_matches_detect(tmp_path, capsys):
     detect_doc = json.loads(capsys.readouterr().out)
 
     keys = {"analyzer", "severity", "site", "message",
-            "wasted_bytes", "time_at_risk_s"}
+            "wasted_bytes", "time_at_risk_s",
+            "recommendation", "est_saved_s"}
     assert lint_doc and lint_doc[0]["findings"]
     for doc in (lint_doc, detect_doc):
         for entry in doc:
