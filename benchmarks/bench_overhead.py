@@ -36,6 +36,20 @@ Also measures the analysis hot paths at the paper's experiment scale:
     compressed-npz columnar arrays vs compact JSON, exact round-trip
     required (the ratio is the size-independent trajectory signal).
     Persisted to BENCH_persist.json at the repo root.
+  * warehouse tree merge — 256 per-host stores reduced via
+    `TraceStore.merge_tree` (k-ary tree over a process pool) vs the
+    serial left fold, result `identical` to the flat merge required.
+    The 2x gate applies at >= 4 usable cores (mirrors BENCH_shard);
+    the tree also wins algorithmically (O(n log n) vs O(n^2) row
+    traffic), which is what single-core runs record.  Persisted to
+    BENCH_merge.json at the repo root.
+  * mmap zero-copy load — a fleet session opened eagerly vs
+    `load(mmap=True)` on an uncompressed npz, gated on *peak RSS*
+    (subprocess `ru_maxrss` deltas over an imports-only baseline), not
+    wall clock: the mmap open must stay under an absolute ceiling and
+    the eager/mmap RSS ratio is the trajectory signal; `query`/`diff`
+    on a fleet slice must be byte-identical across the two load modes.
+    Persisted to BENCH_mmapload.json at the repo root.
 
 CI smoke entry points (no jax worker, smaller traces):
 
@@ -44,6 +58,8 @@ CI smoke entry points (no jax worker, smaller traces):
     python benchmarks/bench_overhead.py --shard-only [--sites N]
     python benchmarks/bench_overhead.py --append-only [--sites N]
     python benchmarks/bench_overhead.py --persist-only [--sites N]
+    python benchmarks/bench_overhead.py --merge-only [--sites N]
+    python benchmarks/bench_overhead.py --mmapload-only [--sites N]
 """
 from __future__ import annotations
 
@@ -515,6 +531,204 @@ def _persist_case(n_sites: int = 100_000, json_path: str = None):
     return rows, payload
 
 
+def _merge_case(n_sites: int = 100_000, n_stores: int = 256,
+                json_path: str = None):
+    """Warehouse tree-reduction merge vs the serial left fold.
+
+    `n_stores` per-host stores (distinct-seed synthetic modules, cycled
+    so setup stays parse-light) reduce two ways: the O(n^2)-row-traffic
+    left fold (`acc = merge([acc, s])`, the naive warehouse loop) and
+    `TraceStore.merge_tree` (k-ary, process pool when cores allow).
+    Both must be `identical` to the flat `TraceStore.merge` — the
+    associativity invariant the query layer leans on.
+
+    Gate: >= 2x over the fold at >= 4 usable cores (BENCH_shard's core
+    guard); below that the run still records the algorithmic win —
+    tree depth log_k(n) copies each row O(log n) times vs the fold's
+    O(n) — which is why single-core smoke ratios stay meaningful.
+    """
+    from repro.core import hlo_parser
+    from repro.core.store import TraceStore
+    from repro.core.synth import synthetic_hlo
+
+    per = max(n_sites // n_stores, 1)
+    base = []
+    for seed in range(min(n_stores, 16)):
+        text = synthetic_hlo(n_sites=per, seed=seed, n_computations=1)
+        store, _ = hlo_parser.parse_hlo_store(text, 8)
+        base.append(store)
+    stores = [base[i % len(base)] for i in range(n_stores)]
+    usable = min(os.cpu_count() or 1, 8)
+
+    flat = TraceStore.merge(stores)
+
+    t0 = time.perf_counter()
+    acc = stores[0]
+    for s in stores[1:]:
+        acc = TraceStore.merge([acc, s])
+    t_fold = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    tree = TraceStore.merge_tree(stores, arity=8, workers=usable)
+    t_tree = time.perf_counter() - t0
+
+    identical = tree.identical(flat) and acc.identical(flat)
+    speedup = t_fold / max(t_tree, 1e-9)
+    payload = {
+        "bench": "merge_tree",
+        "sites": flat.n,
+        "stores": n_stores,
+        "arity": 8,
+        "usable_cores": usable,
+        "fold_s": round(t_fold, 4),
+        "tree_s": round(t_tree, 4),
+        "speedup": round(speedup, 2),
+        "target": 2.0,
+        "gate_applies": usable >= 4 and n_sites >= 100_000,
+        "byte_identical": identical,
+    }
+    _write_bench_payload("BENCH_merge", n_sites, payload, json_path)
+    rows = [
+        (f"overhead/merge{n_sites//1000}k/serial_fold", t_fold * 1e6,
+         "baseline-cost"),
+        (f"overhead/merge{n_sites//1000}k/tree_reduce", t_tree * 1e6,
+         f"speedup={speedup:.2f}x|target>=2x@4cores|stores={n_stores}|"
+         f"usable_cores={usable}|byte_identical={identical}"),
+    ]
+    return rows, payload
+
+
+# Runs once per load mode in a child interpreter so the RSS high-water
+# mark isolates that mode's footprint; mode "base" stops after the
+# imports and prices the interpreter + numpy baseline the deltas
+# subtract out.  Forked children inherit the parent's peak RSS (the
+# bench parent holds the whole fleet session), so the worker resets
+# its high-water mark to current RSS (`clear_refs`) after the imports
+# and reads `VmHWM` — `ru_maxrss` is the fallback where /proc is
+# missing, with the base subtraction absorbing the inherited peak.
+_MMAP_WORKER = """
+import json, resource, sys
+mode, path = sys.argv[1], sys.argv[2]
+from repro.core.session import TraceSession
+
+def peak_kb():
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmHWM:"):
+                    return int(line.split()[1])
+    except OSError:
+        pass
+    return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+
+try:
+    with open("/proc/self/clear_refs", "w") as f:
+        f.write("5")
+except OSError:
+    pass
+out = {"query": None, "diff": None}
+if mode != "base":
+    sess = TraceSession.load(path, mmap=(mode == "mmap"))
+    out["query"] = json.dumps(sess.query(host="00*", by="kind_link"),
+                              sort_keys=True)
+    out["diff"] = sess.diff("host=000", "host=001", as_json=True)
+out["rss_kb"] = peak_kb()
+print("JSON" + json.dumps(out))
+"""
+
+
+def _mmapload_case(n_sites: int = 1_000_000, json_path: str = None):
+    """Eager vs memory-mapped fleet-session load, gated on peak RSS.
+
+    An 8-host fleet session (`n_sites` total) is saved uncompressed,
+    then three child interpreters report `ru_maxrss`: imports-only
+    (base), eager `load`, and `load(mmap=True)` — each also running the
+    same fleet `query` + slice `diff`.  Deltas over base make the
+    numbers machine-portable; the gates are (1) the mmap delta under an
+    absolute ceiling (`max(64MB, 200B/site)` — a materialized load
+    costs ~160B/site in columns alone, so a leaky mmap path cannot
+    hide), and (2) query/diff output byte-identical across load modes.
+    The eager/mmap delta ratio is the CI trajectory `speedup`.
+    """
+    import subprocess
+    import sys
+    import tempfile
+
+    from repro.core.session import TraceSession
+    from repro.core.synth import synthetic_trace
+    from repro.core.topology import MeshSpec
+
+    n_hosts = 8
+    per = max(n_sites // n_hosts, 1)
+    mesh = MeshSpec((2, 4), ("data", "model"))
+    sess = TraceSession("mmapfleet", [
+        synthetic_trace(f"host{h:03d}_step000", mesh, n_sites=per, seed=h)
+        for h in range(n_hosts)])
+    for t in sess:
+        _ = t.store
+
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src") \
+        + os.pathsep + env.get("PYTHONPATH", "")
+
+    def probe(mode, path):
+        t0 = time.perf_counter()
+        proc = subprocess.run(
+            [sys.executable, "-c", _MMAP_WORKER, mode, path],
+            capture_output=True, text=True, env=env, check=True)
+        dt = time.perf_counter() - t0
+        for line in proc.stdout.splitlines():
+            if line.startswith("JSON"):
+                return json.loads(line[4:]), dt
+        raise RuntimeError(f"no JSON output from {mode} worker:\n"
+                           + proc.stderr)
+
+    with tempfile.TemporaryDirectory() as td:
+        zp = os.path.join(td, "fleet.npz")
+        sess.save(zp, compress=False)
+        npz_mb = os.path.getsize(zp) / 1e6
+        base, _ = probe("base", zp)
+        eager, t_eager = probe("eager", zp)
+        mmap_, t_mmap = probe("mmap", zp)
+
+    # floor both deltas at 1MB: tiny smoke runs otherwise divide page
+    # noise by page noise and the trajectory ratio loses its meaning
+    eager_delta = max(eager["rss_kb"] - base["rss_kb"], 1024) / 1024.0
+    mmap_delta = max(mmap_["rss_kb"] - base["rss_kb"], 1024) / 1024.0
+    ceiling_mb = max(64.0, n_sites * 200 / 1e6)
+    under_ceiling = mmap_delta <= ceiling_mb
+    byte_identical = (eager["query"] == mmap_["query"]
+                      and eager["diff"] == mmap_["diff"]
+                      and eager["query"] is not None)
+    speedup = eager_delta / mmap_delta
+    payload = {
+        "bench": "mmap_load",
+        "sites": n_hosts * per,
+        "n_traces": n_hosts,
+        "npz_mb": round(npz_mb, 1),
+        "rss_base_mb": round(base["rss_kb"] / 1024.0, 1),
+        "eager_delta_mb": round(eager_delta, 1),
+        "mmap_delta_mb": round(mmap_delta, 1),
+        "rss_ceiling_mb": round(ceiling_mb, 1),
+        "rss_under_ceiling": under_ceiling,
+        "byte_identical": byte_identical,
+        "speedup": round(speedup, 2),
+        "target": 2.0,
+        "gate_applies": n_sites >= 100_000,
+        "ok": under_ceiling and byte_identical,
+    }
+    _write_bench_payload("BENCH_mmapload", n_sites, payload, json_path)
+    rows = [
+        (f"overhead/mmap{n_sites//1000}k/eager_load", t_eager * 1e6,
+         f"rss_delta_mb={eager_delta:.1f}|baseline-cost"),
+        (f"overhead/mmap{n_sites//1000}k/mmap_load", t_mmap * 1e6,
+         f"rss_delta_mb={mmap_delta:.1f}|rss_ratio={speedup:.2f}x|"
+         f"ceiling_mb={ceiling_mb:.0f}|under_ceiling={under_ceiling}|"
+         f"byte_identical={byte_identical}"),
+    ]
+    return rows, payload
+
+
 def run():
     rows = _agg_100k_case()
     render_rows, _rpayload = _render_case()     # 100k: writes BENCH_render.json
@@ -527,6 +741,10 @@ def run():
     rows += append_rows
     persist_rows, _ppayload = _persist_case()   # 100k: BENCH_persist.json
     rows += persist_rows
+    merge_rows, _mpayload = _merge_case()       # 100k: BENCH_merge.json
+    rows += merge_rows
+    mmap_rows, _mmpayload = _mmapload_case()    # 1M: BENCH_mmapload.json
+    rows += mmap_rows
     out = run_worker(WORKER, devices=8)
     for line in out.splitlines():
         if line.startswith("JSON"):
@@ -548,13 +766,17 @@ if __name__ == "__main__":
     ap.add_argument("--shard-only", action="store_true")
     ap.add_argument("--append-only", action="store_true")
     ap.add_argument("--persist-only", action="store_true")
+    ap.add_argument("--merge-only", action="store_true")
+    ap.add_argument("--mmapload-only", action="store_true")
     ap.add_argument("--sites", type=int,
                     default=int(os.environ.get("INGEST_SITES", 100_000)))
     args = ap.parse_args()
     if not (args.ingest_only or args.render_only or args.shard_only
-            or args.append_only or args.persist_only):
+            or args.append_only or args.persist_only or args.merge_only
+            or args.mmapload_only):
         ap.error("pass --ingest-only / --render-only / --shard-only / "
-                 "--append-only / --persist-only as a direct entry point")
+                 "--append-only / --persist-only / --merge-only / "
+                 "--mmapload-only as a direct entry point")
     cases = [
         # (enabled, case fn, artifact stem, equivalence key, label)
         (args.ingest_only, _ingest_case, "BENCH_ingest", "equivalent",
@@ -567,6 +789,10 @@ if __name__ == "__main__":
          "append"),
         (args.persist_only, _persist_case, "BENCH_persist", "round_trip_ok",
          "persist"),
+        (args.merge_only, _merge_case, "BENCH_merge", "byte_identical",
+         "merge"),
+        (args.mmapload_only, _mmapload_case, "BENCH_mmapload", "ok",
+         "mmapload"),
     ]
     failed = False
     for enabled, case_fn, stem, equiv_key, label in cases:

@@ -2,11 +2,13 @@
 # Tier-1 test gate: run from the repo root.  Extra args pass through to
 # pytest (e.g. `scripts/test.sh tests/test_session.py -k roundtrip`).
 #
-#   TIER=smoke scripts/test.sh    # reproduce the CI job in one command:
+#   TIER=smoke scripts/test.sh    # reproduce the CI jobs in one command:
 #                                 # analysis-layer tests, the ingest/render/
 #                                 # shard/append/persist smoke benches, a
 #                                 # `session watch --once` smoke, the chaos
-#                                 # gate (corrupt-dump matrix), and the
+#                                 # gate (corrupt-dump matrix), the warehouse
+#                                 # smoke (200-host fleet ingest, mmap query,
+#                                 # fleet diff, merge/mmap benches), and the
 #                                 # bench-trajectory gate (no jax compilation)
 set -u
 cd "$(dirname "$0")/.."
@@ -19,7 +21,7 @@ if [ "${TIER:-full}" = "smoke" ]; then
         tests/test_session.py tests/test_detect.py tests/test_tracer.py \
         tests/test_shard.py tests/test_commcheck.py tests/test_append.py \
         tests/test_watch.py tests/test_chaos.py tests/test_whatif.py \
-        tests/test_cli_help.py \
+        tests/test_cli_help.py tests/test_warehouse.py \
         "$@"
     rc=$?
     if [ "$rc" -ne 0 ]; then
@@ -45,17 +47,40 @@ sites_per_file=400, seed=0)" || exit $?
     # chaos gate: corrupt-dump matrix through ingest + the watch daemon —
     # controlled exit codes, quarantine provenance, zero-re-parse resume
     python scripts/chaos_smoke.py || exit $?
+    # warehouse smoke (mirrors the CI `warehouse` job one-to-one):
+    # 200-host fleet dump -> uncompressed ingest -> mmap query/diff
+    rm -rf results/warehouse
+    python -c "import sys; sys.path.insert(0, 'src'); \
+from repro.core.synth import write_fleet_dump; \
+write_fleet_dump('results/warehouse/dump', n_hosts=200, \
+steps=1, sites_per_file=40, seed=0)" || exit $?
+    python -m repro.core.session ingest results/warehouse/fleet.npz \
+        results/warehouse/dump/*.txt --mesh 2,4 --axes data,model \
+        --no-compress || exit $?
+    python -m repro.core.session query results/warehouse/fleet.npz \
+        --host '00*' --mmap --json \
+        > results/warehouse/query_00x.json || exit $?
+    python -m repro.core.session query results/warehouse/fleet.npz \
+        --kind 'all-reduce*' --by semantic --mmap || exit $?
+    python -m repro.core.session diff results/warehouse/fleet.npz \
+        'host=00*' 'host=01*' --mmap --json \
+        > results/warehouse/diff_00x_01x.json || exit $?
     python benchmarks/bench_overhead.py --ingest-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --render-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --shard-only --sites 50000 || exit $?
     python benchmarks/bench_overhead.py --append-only --sites 20000 || exit $?
     python benchmarks/bench_overhead.py --persist-only --sites 20000 || exit $?
+    python benchmarks/bench_overhead.py --merge-only --sites 25600 || exit $?
+    python benchmarks/bench_overhead.py --mmapload-only --sites 50000 \
+        || exit $?
     python scripts/bench_gate.py \
         results/BENCH_ingest_smoke.json:BENCH_ingest.json \
         results/BENCH_render_smoke.json:BENCH_render.json \
         results/BENCH_shard_smoke.json:BENCH_shard.json:0.5 \
         results/BENCH_append_smoke.json:BENCH_append.json:0.5 \
-        results/BENCH_persist_smoke.json:BENCH_persist.json:0.55
+        results/BENCH_persist_smoke.json:BENCH_persist.json:0.55 \
+        results/BENCH_merge_smoke.json:BENCH_merge.json:0.4 \
+        results/BENCH_mmapload_smoke.json:BENCH_mmapload.json:0.4
     exit $?
 fi
 

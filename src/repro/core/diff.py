@@ -142,16 +142,20 @@ def _filter_rows(rows: List[DiffRow], top: Optional[int] = None,
 
 def diff_json(a: Trace, b: Trace, by: str = "kind_link",
               top: Optional[int] = None,
-              only_regressed: bool = False) -> Dict[str, object]:
+              only_regressed: bool = False,
+              extra: Optional[Dict[str, object]] = None
+              ) -> Dict[str, object]:
     """Machine-readable pairwise diff (the tooling-facing sibling of
     `render_diff`): one dict per aligned row plus modeled-time totals.
 
     `bytes_ratio` is `null` for rows new in B (the rendered verdict says
-    NEW; infinity is not valid JSON).
+    NEW; infinity is not valid JSON).  `extra`, when given, lands under
+    a `slice` key — the session layer uses it to record the fleet slice
+    specs each side was merged from.
     """
     rows = _filter_rows(diff_traces(a, b, by), top, only_regressed)
     ta, tb = a.total_est_time_s(), b.total_est_time_s()
-    return {
+    payload: Dict[str, object] = {
         "a": a.label,
         "b": b.label,
         "by": _norm_by(by),
@@ -169,6 +173,9 @@ def diff_json(a: Trace, b: Trace, by: str = "kind_link",
             "verdict": r.verdict(),
         } for r in rows],
     }
+    if extra is not None:
+        payload["slice"] = extra
+    return payload
 
 
 def render_diff(a: Trace, b: Trace, by: str = "kind_link",

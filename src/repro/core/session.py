@@ -22,7 +22,12 @@ CLI:
     python -m repro.core.session table PATH [--by kind_link|semantic|site] \\
                                             [--metric bytes|time|count]
     python -m repro.core.session diff  PATH LABEL_A LABEL_B [--by ...|site] \\
-                                        [--top N] [--only-regressed] [--json]
+                                        [--top N] [--only-regressed] [--json] \\
+                                        [--mmap]
+    python -m repro.core.session query PATH [--host GLOB] [--step N|GLOB] \\
+                                        [--op GLOB] [--kind GLOB] \\
+                                        [--by kind_link|semantic|site] \\
+                                        [--json] [--mmap]
     python -m repro.core.session report PATH [LABEL] [--format json|html] \\
                                         [--out FILE] [--stream] \\
                                         [--chunk-sites N]
@@ -71,12 +76,24 @@ and `--checkpoint` makes the daemon crash-resumable.
 3 when any input was skipped, salvaged or quarantined (the session is
 still written, carrying the machine-readable ingest report), and 2 for
 hard failures.
+
+`query` is the warehouse slice view: filter the session's traces by
+host/step (parsed from trace labels, `host012_step003`-style) and its
+rows by op/kind globs, then aggregate the slice — without merging or
+materializing anything.  `diff` and `report` accept the same slice
+specs (`host=00*,step=1`) in place of a trace label: matching traces
+tree-merge into one side of the comparison.  `--mmap` opens an
+*uncompressed* npz (`ingest --no-compress`) zero-copy, so fleet-scale
+sessions slice without loading; exit codes follow `detect`/`lint`
+(0 ok, 2 input errors).
 """
 from __future__ import annotations
 
 import dataclasses
+import fnmatch
 import json
 import os
+import re
 import sys
 import time
 from typing import Dict, Iterator, List, Optional, Sequence, Tuple, Union
@@ -85,7 +102,7 @@ import numpy as np
 
 from repro.core.events import HloOpStats, Trace
 from repro.core.hlo_parser import AUTO_SHARD_BYTES
-from repro.core.persist import atomic_open
+from repro.core.persist import atomic_open, open_npz_mmap, write_npz
 from repro.core.store import TraceStore
 from repro.core.topology import Hardware, MeshSpec, V5E
 
@@ -125,6 +142,75 @@ def _trace_from_meta(meta: Dict[str, object], store: TraceStore) -> Trace:
 
 
 # --------------------------------------------------------------------------
+# warehouse label metadata + slice specs
+# --------------------------------------------------------------------------
+
+# fleet dump naming convention: labels (= file stems) carry the host id
+# and step index, e.g. "host012_step003".  The host capture requires a
+# non-letter (or start) before "host" so e.g. "localhost" doesn't match.
+_HOST_RE = re.compile(r"(?:^|[^A-Za-z])host[_-]?([0-9A-Za-z]+)")
+_STEP_RE = re.compile(r"(?:^|[^A-Za-z])step[_-]?([0-9]+)")
+
+_SLICE_KEYS = ("host", "step", "op", "kind")
+
+
+def label_meta(label: str) -> Dict[str, object]:
+    """Parse per-trace warehouse metadata out of a trace label.
+
+    Returns a dict with `host` (string id) and/or `step` (int) when the
+    label follows the `host012_step003` fleet-dump convention; keys are
+    absent when the label carries no such marker.  This is the per-trace
+    extension of the `IngestReport` per-file provenance — labels are
+    file stems, so the ingest record and the trace agree.
+    """
+    meta: Dict[str, object] = {}
+    m = _HOST_RE.search(label)
+    if m:
+        meta["host"] = m.group(1)
+    m = _STEP_RE.search(label)
+    if m:
+        meta["step"] = int(m.group(1))
+    return meta
+
+
+def parse_slice(spec: str) -> Dict[str, str]:
+    """Parse a `host=00*,step=3,op=*,kind=*` slice spec into kwargs.
+
+    The CLI accepts these wherever a trace label is expected (`diff`,
+    `report`) and as the `query` filter flags; unknown keys and bare
+    words raise `ValueError` (CLI exit 2).
+    """
+    out: Dict[str, str] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"bad slice spec {part!r}: expected key=value with key "
+                f"in {'/'.join(_SLICE_KEYS)}")
+        k, v = part.split("=", 1)
+        if k not in _SLICE_KEYS:
+            raise ValueError(
+                f"unknown slice key {k!r} (expected one of "
+                f"{'/'.join(_SLICE_KEYS)})")
+        if not v:
+            raise ValueError(f"empty value for slice key {k!r} "
+                             f"(use {k}=* to match everything)")
+        out[k] = v
+    return out
+
+
+def _step_match(step: int, spec: str) -> bool:
+    """Match a parsed step index against a numeric or glob spec."""
+    spec = str(spec)
+    if spec.isdigit():
+        return step == int(spec)
+    return (fnmatch.fnmatchcase(str(step), spec)
+            or fnmatch.fnmatchcase(f"{step:03d}", spec))
+
+
+# --------------------------------------------------------------------------
 # bulk ingest — many HLO dumps -> one session, fanned out across processes
 # --------------------------------------------------------------------------
 
@@ -157,18 +243,30 @@ class IngestRecord:
     attempts: int = 1
     error: str = ""
     salvage: Optional[Dict[str, object]] = None
+    # warehouse provenance, derived from the label's fleet-dump naming
+    # convention when not given (see `label_meta`); "" / None = unknown
+    host: str = ""
+    step: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        if not self.host and self.step is None:
+            meta = label_meta(self.label)
+            self.host = str(meta.get("host", ""))
+            self.step = meta.get("step")
 
     def to_dict(self) -> Dict[str, object]:
         return {"source": self.source, "label": self.label,
                 "status": self.status, "attempts": int(self.attempts),
-                "error": self.error, "salvage": self.salvage}
+                "error": self.error, "salvage": self.salvage,
+                "host": self.host, "step": self.step}
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "IngestRecord":
         return cls(source=d["source"], label=d["label"],
                    status=d.get("status", "ok"),
                    attempts=int(d.get("attempts", 1)),
-                   error=d.get("error", ""), salvage=d.get("salvage"))
+                   error=d.get("error", ""), salvage=d.get("salvage"),
+                   host=str(d.get("host", "")), step=d.get("step"))
 
 
 @dataclasses.dataclass
@@ -379,33 +477,164 @@ class TraceSession:
     def diff(self, label_a: str, label_b: str, by: str = "kind_link",
              top: Optional[int] = None, only_regressed: bool = False,
              as_json: bool = False) -> str:
-        """Pairwise diff between two labels.
+        """Pairwise diff between two labels or fleet slices.
 
-        `top` keeps only the N largest-|byte-delta| rows, `only_regressed`
-        keeps NEW/GREW rows, and `as_json` returns the machine-readable
-        payload (`diff.diff_json`) instead of the rendered table.
+        Either side may be a trace label or a `host=00*,step=1` slice
+        spec (see `parse_slice`): slice sides tree-merge their matching
+        traces into one synthetic trace first, so "hosts 00x vs hosts
+        01x" is one diff, not a quadratic pile of pairs.  `top` keeps
+        only the N largest-|byte-delta| rows, `only_regressed` keeps
+        NEW/GREW rows, and `as_json` returns the machine-readable
+        payload (`diff.diff_json`, with a `slice` block naming the
+        specs) instead of the rendered table.
         """
         from repro.core.diff import diff_json, render_diff
-        a, b = self.get(label_a), self.get(label_b)
+        a, n_a = self._resolve(label_a)
+        b, n_b = self._resolve(label_b)
         if as_json:
+            extra = None
+            if n_a is not None or n_b is not None:
+                extra = {"a": {"spec": label_a,
+                               "traces": 1 if n_a is None else n_a},
+                         "b": {"spec": label_b,
+                               "traces": 1 if n_b is None else n_b}}
             return json.dumps(diff_json(a, b, by=by, top=top,
-                                        only_regressed=only_regressed),
+                                        only_regressed=only_regressed,
+                                        extra=extra),
                               indent=1)
         return render_diff(a, b, by=by, top=top,
                            only_regressed=only_regressed)
+
+    # -- warehouse query layer -----------------------------------------------
+
+    def select(self, host: Optional[str] = None, step: Optional[str] = None,
+               op: Optional[str] = None, kind: Optional[str] = None
+               ) -> "TraceSession":
+        """The sub-session matching a warehouse slice.
+
+        `host`/`step` filter whole traces on their label metadata
+        (`label_meta`; shell globs, numeric steps match exactly).
+        `op`/`kind` filter *rows* inside each surviving trace on the
+        interned codes (`Categorical.mask_glob` — O(vocab) string work,
+        one vectorized mask per column) *before* any rollup runs.
+        Traces with no row filter are shared by reference, so slicing a
+        memory-mapped session stays zero-copy.
+        """
+        out: List[Trace] = []
+        for t in self._traces:
+            meta = label_meta(t.label)
+            if host is not None and not fnmatch.fnmatchcase(
+                    str(meta.get("host", "")), host):
+                continue
+            if step is not None:
+                st = meta.get("step")
+                if st is None or not _step_match(st, step):
+                    continue
+            if op is not None or kind is not None:
+                mask = np.ones(t.store.n, dtype=bool)
+                if op is not None:
+                    mask &= t.store.op_name.mask_glob(op)
+                if kind is not None:
+                    mask &= t.store.kind.mask_glob(kind)
+                t = _trace_from_meta(_trace_meta(t), t.store.where(mask))
+            out.append(t)
+        sel = TraceSession(self.name, out)
+        sel.ingest_report = self.ingest_report
+        return sel
+
+    def merged(self, label: str = "fleet", arity: int = 8,
+               workers: int = 1) -> Trace:
+        """All traces tree-merged into one synthetic fleet trace.
+
+        Store rows concatenate in session order via
+        `TraceStore.merge_tree` (identical to the flat merge, O(log n)
+        reduction depth); scalars sum and op stats fold with
+        `HloOpStats.merged`.  Mesh metadata comes from the first trace —
+        a fleet dump shares one mesh by construction.  A single-trace
+        session returns that trace's store unmerged (and uncopied).
+        """
+        if not self._traces:
+            raise KeyError(
+                f"session {self.name!r} has no traces to merge")
+        store = TraceStore.merge_tree([t.store for t in self._traces],
+                                      arity=arity, workers=workers)
+        meta = _trace_meta(self._traces[0])
+        meta["label"] = label
+        meta["scalars"] = {
+            k: float(sum(getattr(t, k) for t in self._traces))
+            for k in _TRACE_SCALARS}
+        meta["op_stats"] = dataclasses.asdict(
+            HloOpStats.merged([t.op_stats for t in self._traces]))
+        return _trace_from_meta(meta, store)
+
+    def _resolve(self, label: str) -> Tuple[Trace, Optional[int]]:
+        """A trace for a label *or* slice spec: (trace, n merged | None).
+
+        A spec containing "=" selects+merges (raising `KeyError` when it
+        matches nothing, same contract as an unknown label); a plain
+        label passes through `get`.
+        """
+        if "=" in label:
+            sel = self.select(**parse_slice(label))
+            if not len(sel):
+                raise KeyError(
+                    f"slice {label!r} matches no traces in session "
+                    f"{self.name!r} (have {self.labels()})")
+            return sel.merged(label=label), len(sel)
+        return self.get(label), None
+
+    def query(self, host: Optional[str] = None, step: Optional[str] = None,
+              op: Optional[str] = None, kind: Optional[str] = None,
+              by: str = "kind_link") -> Dict[str, object]:
+        """Aggregate a warehouse slice without merging or materializing.
+
+        Filters with `select`, then folds the surviving stores through
+        `IncrementalRollup` — O(unique labels) state, no concatenation —
+        so querying a memory-mapped fleet session touches only the
+        columns the rollup reads.  Returns the stable machine payload
+        (`session query --json`): slice echo, per-trace rows, fleet
+        totals, and the requested rollup.
+        """
+        from repro.core.store import IncrementalRollup
+        sel = self.select(host=host, step=step, op=op, kind=kind)
+        roll = IncrementalRollup(by)
+        for t in sel:
+            roll.update(t.store)
+        rows = roll.as_dict()
+        totals = {m: float(sum(r[m] for r in rows.values()))
+                  for m in ("bytes", "wire_bytes", "count", "time_s")}
+        payload: Dict[str, object] = {
+            "session": self.name,
+            "slice": {"host": host, "step": step, "op": op, "kind": kind},
+            "traces": sel.labels(),
+            "sites": int(sum(t.store.n for t in sel)),
+            "totals": totals,
+            "rollup": {"by": by, "rows": rows},
+        }
+        if self.ingest_report is not None:
+            degraded = self.ingest_report.degraded
+            payload["ingest"] = {
+                "records": len(self.ingest_report.records),
+                "degraded": len(degraded),
+                "degraded_hosts": sorted({r.host for r in degraded
+                                          if r.host}),
+            }
+        return payload
 
     def report(self, label: Optional[str] = None, fmt: str = "json",
                fp=None, stream: bool = False, chunk_sites: int = 8192):
         """Render one trace (default: the first) as JSON or HTML.
 
-        With `fp` set, writes to it — streamed through the chunked
-        columnar emitters when `stream=True` (bounded memory at 1M+
-        sites).  Without `fp`, returns the rendered string.
+        `label` may also be a `host=00*`-style slice spec: the matching
+        traces tree-merge into one synthetic fleet trace first.  With
+        `fp` set, writes to it — streamed through the chunked columnar
+        emitters when `stream=True` (bounded memory at 1M+ sites).
+        Without `fp`, returns the rendered string.
         """
         from repro.core import report as report_mod
         if not self._traces:
             raise KeyError(f"session {self.name!r} has no traces to report")
-        tr = self.get(label) if label is not None else self._traces[0]
+        tr = self._resolve(label)[0] if label is not None else self._traces[0]
         mesh = MeshSpec(tr.mesh_shape, tr.mesh_axes)
         if fp is None:
             return report_mod.to_json(tr) if fmt == "json" \
@@ -587,7 +816,8 @@ class TraceSession:
 
     # -- persistence ---------------------------------------------------------
 
-    def save(self, path: str) -> str:
+    def save(self, path: str, *, compress: bool = True,
+             workers: Optional[int] = None) -> str:
         """Persist to `path` (.json or .npz, by extension; default .json).
 
         Writes are atomic (same-directory temp file + `os.replace`): a
@@ -596,6 +826,13 @@ class TraceSession:
         new one, never a torn intermediate.  Returns the path actually
         written; `load` applies the same extension defaulting, so
         `load(p)` works for any extensionless `p` passed to `save`.
+
+        The npz container is `persist.write_npz`: byte-deterministic
+        (same session -> same file) and DEFLATE'd across a thread pool
+        (`workers`; zlib releases the GIL) while one writer assembles
+        the archive — the `savez_compressed` single-thread bottleneck
+        is gone.  `compress=False` stores members raw, the layout
+        `load(mmap=True)` opens zero-copy.
         """
         rep = self.ingest_report.to_dict() if self.ingest_report else None
         if path.endswith(".npz"):
@@ -608,7 +845,7 @@ class TraceSession:
                 side["ingest_report"] = rep
             arrs["session"] = np.array(json.dumps(side))
             with atomic_open(path, "wb") as f:
-                np.savez_compressed(f, **arrs)
+                write_npz(f, arrs, compress=compress, workers=workers)
             return path
         if not path.endswith(".json"):
             path += ".json"
@@ -617,25 +854,52 @@ class TraceSession:
         if rep is not None:
             payload["ingest_report"] = rep
         with atomic_open(path, "w") as f:
-            json.dump(payload, f, separators=(",", ":"))
+            json.dump(payload, f, separators=(",", ":"),
+                      sort_keys=True)
         return path
 
     @classmethod
-    def load(cls, path: str) -> "TraceSession":
+    def load(cls, path: str, *, mmap: bool = False) -> "TraceSession":
+        """Load a saved session; `mmap=True` opens an npz zero-copy.
+
+        The mmap path requires an *uncompressed* archive (`save` with
+        `compress=False` / `session ingest --no-compress`): columns
+        adopt read-only memory maps lazily (`TraceStore.from_npz_arrays
+        (lazy=True)`), so a 10M-site session opens without
+        materializing row data — pages fault in as queries touch them,
+        and any mutation (`append`) copies instead of writing through.
+        Raises `ValueError` for a compressed archive or a non-npz path.
+        """
         if not path.endswith((".json", ".npz")):
             path += ".json"    # mirror save's extension defaulting
         if path.endswith(".npz"):
-            with np.load(path) as arrs:
-                side = json.loads(str(arrs["session"]))
+            if mmap:
+                if not os.path.exists(path):
+                    raise FileNotFoundError(path)
+                marrs = open_npz_mmap(path)
+                side = json.loads(str(marrs["session"]))
                 traces = [
                     _trace_from_meta(
-                        meta, TraceStore.from_npz_arrays(arrs, prefix=f"t{i}_"))
+                        meta, TraceStore.from_npz_arrays(
+                            marrs, prefix=f"t{i}_", lazy=True))
                     for i, meta in enumerate(side["traces"])]
+            else:
+                with np.load(path) as arrs:
+                    side = json.loads(str(arrs["session"]))
+                    traces = [
+                        _trace_from_meta(
+                            meta, TraceStore.from_npz_arrays(
+                                arrs, prefix=f"t{i}_"))
+                        for i, meta in enumerate(side["traces"])]
             sess = cls(side["name"], traces)
             if side.get("ingest_report") is not None:
                 sess.ingest_report = IngestReport.from_dict(
                     side["ingest_report"])
             return sess
+        if mmap:
+            raise ValueError(
+                f"mmap load requires an uncompressed .npz session, "
+                f"got {path!r}")
         with open(path) as f:
             payload = json.load(f)
         sess = cls(payload["name"],
@@ -744,6 +1008,10 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="print the machine-readable ingest report "
                         "(every input's outcome) to stdout")
+    p.add_argument("--no-compress", action="store_true",
+                   help="store npz members raw instead of DEFLATE'd — "
+                        "the layout `query`/`diff --mmap` opens "
+                        "zero-copy (larger file, instant open)")
 
     p = sub.add_parser("watch", help="tail an HLO dump directory: ingest "
                                      "new/changed files, keep rolling "
@@ -817,10 +1085,14 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                    help="cell metric: operand bytes, modeled est time, "
                         "or collective count per step (default bytes)")
 
-    p = sub.add_parser("diff", help="pairwise deep-dive between two labels")
+    p = sub.add_parser("diff", help="pairwise deep-dive between two labels "
+                                    "or fleet slices")
     p.add_argument("path", help="saved session (.json or .npz)")
-    p.add_argument("label_a", help="baseline trace label")
-    p.add_argument("label_b", help="candidate trace label (deltas are B-A)")
+    p.add_argument("label_a", help="baseline trace label, or a fleet slice "
+                                   "spec like host=00*,step=1 (matching "
+                                   "traces tree-merge into one side)")
+    p.add_argument("label_b", help="candidate trace label or slice spec "
+                                   "(deltas are B-A)")
     p.add_argument("--by", choices=("kind_link", "semantic", "site"),
                    default="kind_link",
                    help="alignment key; 'site' aligns per compiled callsite "
@@ -832,6 +1104,40 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
     p.add_argument("--json", action="store_true", dest="as_json",
                    help="emit a machine-readable JSON diff instead of the "
                         "rendered table")
+    p.add_argument("--mmap", action="store_true",
+                   help="open an uncompressed npz session zero-copy "
+                        "(see `ingest --no-compress`)")
+
+    p = sub.add_parser(
+        "query",
+        help="filter a saved session by host/step/op/kind and aggregate "
+             "the slice (warehouse view)",
+        description="Select traces by host/step (parsed from "
+                    "host012_step003-style labels) and rows by op/kind "
+                    "globs, then aggregate the slice without merging. "
+                    "Exit codes: 0 on success (an empty slice is a "
+                    "valid, empty answer), 2 on input errors — same "
+                    "contract as detect/lint.")
+    p.add_argument("path", help="saved session (.json or .npz)")
+    p.add_argument("--host", default=None,
+                   help="host id glob (e.g. 00*), matched against the "
+                        "trace label's hostNNN marker")
+    p.add_argument("--step", default=None,
+                   help="step index (numeric, exact) or glob against the "
+                        "label's stepNNN marker")
+    p.add_argument("--op", default=None,
+                   help="op_name glob, filters rows on interned codes")
+    p.add_argument("--kind", default=None,
+                   help="collective kind glob (e.g. all-reduce*)")
+    p.add_argument("--by", choices=("kind_link", "semantic", "site"),
+                   default="kind_link",
+                   help="rollup key for the slice aggregate "
+                        "(default kind_link)")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit the stable machine payload instead of text")
+    p.add_argument("--mmap", action="store_true",
+                   help="open an uncompressed npz session zero-copy "
+                        "(see `ingest --no-compress`)")
 
     p = sub.add_parser("lint", help="static collective-correctness analysis "
                                     "(commcheck) over sessions or HLO dumps")
@@ -870,7 +1176,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
                               "and `diff --by site`")
     p.add_argument("path", help="saved session (.json or .npz)")
     p.add_argument("label", nargs="?", default=None,
-                   help="trace label (default: the session's first trace)")
+                   help="trace label or fleet slice spec like host=00* "
+                        "(default: the session's first trace)")
     p.add_argument("--format", choices=("json", "html"), default="json",
                    help="output format (default json)")
     p.add_argument("--out", default=None, help="output file (default stdout)")
@@ -949,7 +1256,7 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             print(f"error: {e}", file=sys.stderr)
             return 2
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-        path = sess.save(args.out)
+        path = sess.save(args.out, compress=not args.no_compress)
         rep = sess.ingest_report
         if args.as_json:
             print(json.dumps(rep.to_dict(), indent=1))
@@ -1061,7 +1368,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
         return 0
 
     try:
-        sess = TraceSession.load(args.path)
+        sess = TraceSession.load(args.path,
+                                 mmap=getattr(args, "mmap", False))
     except FileNotFoundError:
         print(f"error: no such session file: {args.path}", file=sys.stderr)
         return 2
@@ -1079,9 +1387,35 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             print(sess.diff(args.label_a, args.label_b, by=args.by,
                             top=args.top, only_regressed=args.only_regressed,
                             as_json=args.as_json))
-        except KeyError as e:
+        except (KeyError, ValueError) as e:
             print(f"error: {e.args[0]}", file=sys.stderr)
             return 2
+    elif args.cmd == "query":
+        try:
+            payload = sess.query(host=args.host, step=args.step,
+                                 op=args.op, kind=args.kind, by=args.by)
+        except ValueError as e:
+            print(f"error: {e.args[0]}", file=sys.stderr)
+            return 2
+        if args.as_json:
+            print(json.dumps(payload, indent=1))
+        else:
+            sl = payload["slice"]
+            spec = ",".join(f"{k}={v}" for k, v in sl.items()
+                            if v is not None) or "(all)"
+            print(f"session '{payload['session']}' slice {spec}: "
+                  f"{len(payload['traces'])} trace(s), "
+                  f"{payload['sites']} sites")
+            tot = payload["totals"]
+            print(f"  totals: {tot['bytes']/1e9:.3f} GB, "
+                  f"{tot['wire_bytes']/1e9:.3f} wire GB, "
+                  f"{tot['count']:.0f} collectives/step, "
+                  f"{tot['time_s']*1e3:.3f} est ms")
+            rows = payload["rollup"]["rows"]
+            for lbl in sorted(rows, key=lambda k: -rows[k]["bytes"]):
+                r = rows[lbl]
+                print(f"  {lbl:40s} {r['bytes']/1e9:9.3f} GB "
+                      f"{r['count']:8.0f}/step {r['time_s']*1e3:9.3f} ms")
     elif args.cmd == "detect":
         from repro.core import detect as detect_mod
         try:
@@ -1101,8 +1435,8 @@ def _main(argv: Optional[Sequence[str]] = None) -> int:
             if label is None:
                 raise KeyError(f"session {sess.name!r} has no traces "
                                f"to report")
-            sess.get(label)
-        except KeyError as e:
+            sess._resolve(label)
+        except (KeyError, ValueError) as e:
             print(f"error: {e.args[0]}", file=sys.stderr)
             return 2
         if args.out:

@@ -25,7 +25,11 @@ existing consumer (detectors, renderers, diffing) is unaffected.
 """
 from __future__ import annotations
 
+import fnmatch
 import json
+import os
+import sys
+import threading
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -127,6 +131,20 @@ class Categorical:
             return np.zeros(len(self.codes), dtype=bool)
         return np.isin(self.codes, np.fromiter(want, dtype=np.int32))
 
+    def mask_glob(self, pattern: str) -> np.ndarray:
+        """Boolean mask of rows whose value matches a shell-style glob.
+
+        The match runs once per *vocab entry*, so filtering a million-row
+        column by `op=transformer*attention*` costs O(vocab) string work
+        plus one vectorized `isin` — the query layer's row filter.
+        A pattern without wildcards degenerates to an exact match.
+        """
+        want = {i for i, v in enumerate(self.vocab)
+                if fnmatch.fnmatchcase(v, pattern)}
+        if not want:
+            return np.zeros(len(self.codes), dtype=bool)
+        return np.isin(self.codes, np.fromiter(want, dtype=np.int32))
+
     def remap(self, fn) -> "Categorical":
         """New categorical applying `fn` once per *vocab entry* (not per row),
         merging entries that map to the same output string."""
@@ -158,6 +176,61 @@ class Categorical:
         add = remap[other.codes] if len(other.codes) \
             else np.empty(0, dtype=np.int32)
         self._buf, self.codes = _grow(self._buf, self.codes, add)
+
+
+class LazyNames:
+    """List-like view of the packed per-row name member, decoded on demand.
+
+    The npz layout stores row names as one newline-joined utf-8 blob
+    (`{prefix}names`, a uint8 column) so an mmap-mode open does not pay
+    O(rows) Python-string materialization up front.  Rollups, detectors,
+    and diff never touch names; only `row()`/report rendering do — this
+    decodes once on first access and behaves like the list afterwards.
+    """
+
+    __slots__ = ("_packed", "_n", "_list")
+
+    def __init__(self, packed: np.ndarray, n: int):
+        self._packed = packed
+        self._n = n
+        self._list: Optional[List[str]] = None
+
+    def _materialize(self) -> List[str]:
+        if self._list is None:
+            if self._n == 0:
+                self._list = []
+            else:
+                # n==1 with an empty name packs to b"", which still
+                # decodes correctly: "".split("\n") == [""]
+                self._list = bytes(self._packed).decode("utf-8").split("\n")
+                if len(self._list) != self._n:
+                    raise ValueError(
+                        f"packed names decode to {len(self._list)} rows, "
+                        f"expected {self._n}")
+        return self._list
+
+    def __len__(self) -> int:
+        return self._n
+
+    def __iter__(self):
+        return iter(self._materialize())
+
+    def __getitem__(self, i):
+        return self._materialize()[i]
+
+    def __eq__(self, other) -> bool:
+        if isinstance(other, (list, LazyNames)):
+            return self._materialize() == list(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return f"LazyNames(n={self._n})"
+
+
+def pack_names(names: Sequence[str]) -> np.ndarray:
+    """Pack row names into the uint8 npz column `LazyNames` decodes."""
+    blob = "\n".join(names).encode("utf-8")
+    return np.frombuffer(blob, dtype=np.uint8)
 
 
 def _intern(index: Dict, key, table: List, value_fn) -> int:
@@ -379,6 +452,44 @@ class TraceStore:
                    stp_tables=stp_tables, stp_code=stp_code,
                    axes_tables=axes_tables, axes_code=axes_code)
 
+    @classmethod
+    def merge_tree(cls, stores: Sequence["TraceStore"], arity: int = 8,
+                   workers: int = 1) -> "TraceStore":
+        """`merge(stores)` as a k-ary reduction tree: O(log n) depth.
+
+        A serial fold over n per-host stores copies the accumulated rows
+        at every step — O(n²·m) row traffic for a fleet of n stores of m
+        rows; even the single flat `merge` call walks every vocab in one
+        process.  The tree reduces `arity` stores at a time, level by
+        level, so total row traffic is O(n·m·log_k n) and each level's
+        chunk merges are independent — with `workers > 1` they run on a
+        process pool (fork preferred: the store list is inherited
+        copy-on-write and only (lo, hi) spans ride the pipe).
+
+        Result is `TraceStore.identical` to `merge(stores)` for *any*
+        arity and worker count: `merge` interns every vocabulary in
+        first-seen order over the concatenation of its inputs' vocabs,
+        and first-seen interning is associative over concatenation — so
+        any ordered bracketing yields the same vocab order, codes, and
+        payload tables (pinned by tests/test_warehouse.py).
+        `workers <= 1` reduces in-process.
+        """
+        if arity < 2:
+            raise ValueError(f"merge_tree arity must be >= 2, got {arity}")
+        stores = list(stores)
+        if not stores:
+            return cls.empty()
+        while len(stores) > 1:
+            chunks = [stores[i:i + arity]
+                      for i in range(0, len(stores), arity)]
+            merged = None
+            if workers and workers > 1 and len(chunks) > 1:
+                merged = _pooled_merge_level(chunks, workers)
+            if merged is None:
+                merged = [cls.merge(c) for c in chunks]
+            stores = merged
+        return stores[0]
+
     def append(self, other: "TraceStore") -> "TraceStore":
         """In-place streaming variant of `merge`: extend self with `other`.
 
@@ -449,6 +560,8 @@ class TraceStore:
         bufs["axes_code"], self.axes_code = _grow(
             bufs.get("axes_code"), self.axes_code, add)
 
+        if not isinstance(self.names, list):
+            self.names = list(self.names)    # adopt a lazy (mmap) name view
         self.names.extend(other.names)
         self.n += other.n
         self._edges = self._gexp = None
@@ -503,6 +616,39 @@ class TraceStore:
             group_tables=self.group_tables, group_code=self.group_code,
             stp_tables=self.stp_tables, stp_code=self.stp_code,
             axes_tables=self.axes_tables, axes_code=self.axes_code)
+
+    def where(self, mask: np.ndarray) -> "TraceStore":
+        """New store holding the rows where `mask` is True.
+
+        Codes are kept as-is against *copies* of the vocab/table
+        containers (append/extend mutate those lists in place, so
+        sharing them would let a later append to either store corrupt
+        the other).  Vocabularies are not compacted: rollups key on
+        occurring codes only, so unused entries are invisible to every
+        aggregate — and skipping compaction keeps the filter O(rows).
+        Works on mmap-backed stores without copying unselected rows'
+        strings (the fancy-indexed numeric columns are fresh arrays).
+        """
+        mask = np.asarray(mask, dtype=bool)
+        if mask.shape != (self.n,):
+            raise ValueError(
+                f"mask shape {mask.shape} != ({self.n},)")
+        idx = np.flatnonzero(mask)
+        num = {col: np.asarray(getattr(self, col))[idx]
+               for col, _dt in _NUM_COLS}
+        cat = {col: Categorical(getattr(self, col).codes[idx],
+                                list(getattr(self, col).vocab))
+               for col in _CAT_COLS}
+        names = self.names
+        return TraceStore(
+            int(len(idx)), num, cat,
+            names=[names[int(i)] for i in idx],
+            group_tables=list(self.group_tables),
+            group_code=self.group_code[idx],
+            stp_tables=list(self.stp_tables),
+            stp_code=self.stp_code[idx],
+            axes_tables=list(self.axes_tables),
+            axes_code=self.axes_code[idx])
 
     # ---- per-row compatibility views ---------------------------------------
 
@@ -823,7 +969,7 @@ class TraceStore:
 
     def _payload_dict(self) -> Dict[str, object]:
         return {
-            "names": self.names,
+            "names": list(self.names),
             "group_tables": self.group_tables,
             "group_code": self.group_code.tolist(),
             "stp_tables": [[list(p) for p in t] for t in self.stp_tables],
@@ -912,11 +1058,13 @@ class TraceStore:
         return cls(n, num, cat, **payload)
 
     def npz_arrays(self, prefix: str = "") -> Dict[str, np.ndarray]:
-        """Flat array dict for `np.savez_compressed` (no object arrays).
+        """Flat array dict for the npz container (no object arrays).
 
-        Numeric and code columns go in natively; the irregular payloads
-        (names, unique tables, vocabs) ride in one JSON side-car string —
-        they are small relative to the columns and compress well.
+        Numeric and code columns go in natively; per-row names pack into
+        one newline-joined uint8 blob (`{prefix}names`, see `LazyNames`)
+        so the side-car stays O(vocab) not O(rows); the remaining
+        irregular payloads (unique tables, vocabs) ride in one JSON
+        side-car string — small relative to the columns.
         """
         arrs: Dict[str, np.ndarray] = {}
         for col, _dt in _NUM_COLS:
@@ -926,11 +1074,11 @@ class TraceStore:
         arrs[f"{prefix}group_code"] = self.group_code
         arrs[f"{prefix}stp_code"] = self.stp_code
         arrs[f"{prefix}axes_code"] = self.axes_code
+        arrs[f"{prefix}names"] = pack_names(self.names)
         side = {
             "version": SCHEMA_VERSION,
             "n": self.n,
             "vocab": {col: getattr(self, col).vocab for col in _CAT_COLS},
-            "names": self.names,
             "group_tables": self.group_tables,
             "stp_tables": [[list(p) for p in t] for t in self.stp_tables],
             "axes_tables": [list(a) for a in self.axes_tables],
@@ -939,7 +1087,17 @@ class TraceStore:
         return arrs
 
     @classmethod
-    def from_npz_arrays(cls, arrs, prefix: str = "") -> "TraceStore":
+    def from_npz_arrays(cls, arrs, prefix: str = "",
+                        lazy: bool = False) -> "TraceStore":
+        """Rebuild a store from `npz_arrays` output (or an mmap view).
+
+        `np.asarray` adopts matching-dtype members without copying, so
+        handing this an `MmapNpz` mapping builds a store whose columns
+        are read-only memory maps — `lazy=True` additionally defers the
+        packed-name decode (`LazyNames`), the only O(rows) Python work
+        left on the load path.  Older archives that kept names in the
+        JSON side-car still load.
+        """
         side = json.loads(str(arrs[f"{prefix}meta"]))
         version = side.get("version")
         if version not in (1, SCHEMA_VERSION):
@@ -956,9 +1114,14 @@ class TraceStore:
                 np.asarray(arrs[f"{prefix}cat_{col}"],
                            dtype=np.int32).reshape(n),
                 list(side["vocab"][col]))
+        if f"{prefix}names" in arrs:
+            lazy_names = LazyNames(arrs[f"{prefix}names"], n)
+            names = lazy_names if lazy else lazy_names._materialize()
+        else:
+            names = list(side["names"])    # pre-warehouse archives
         if version == SCHEMA_VERSION:
             payload = dict(
-                names=list(side["names"]),
+                names=names,
                 group_tables=[[list(map(int, g)) for g in t]
                               for t in side["group_tables"]],
                 group_code=np.asarray(arrs[f"{prefix}group_code"],
@@ -973,6 +1136,78 @@ class TraceStore:
         else:
             payload = cls._payload_from_v1(side)
         return cls(n, num, cat, **payload)
+
+
+# --------------------------------------------------------------------------
+# pooled tree-merge level (merge_tree workers)
+# --------------------------------------------------------------------------
+
+# fork workers inherit the level's store list copy-on-write, so only
+# (lo, hi) spans ride the job pipe; the lock serializes concurrent
+# pooled merges (same discipline as hlo_parser._FORK_SHARD_STATE)
+_FORK_MERGE_STATE = None
+_FORK_MERGE_LOCK = threading.Lock()
+
+
+def _merge_span(span):
+    """Fork worker: merge one chunk of the inherited store list."""
+    lo, hi = span
+    return TraceStore.merge(_FORK_MERGE_STATE[lo:hi])
+
+
+def _merge_job(stores):
+    """Spawn worker: merge one pickled chunk of stores."""
+    return TraceStore.merge(stores)
+
+
+def _pooled_merge_level(chunks, workers):
+    """One merge_tree level on a process pool; None -> caller runs serial.
+
+    Mirrors `parse_hlo_store_sharded`'s ladder: fork when safe (a
+    jax-loaded parent is multithreaded; forking it can deadlock), else
+    spawn behind a no-op probe so a pool that cannot bootstrap degrades
+    to the in-process path instead of hanging `ex.map` forever.
+    """
+    import multiprocessing
+    import pickle
+    from concurrent.futures import ProcessPoolExecutor
+    from concurrent.futures.process import BrokenProcessPool
+    from repro.core.hlo_parser import _SPAWN_PROBE_TIMEOUT_S
+    global _FORK_MERGE_STATE
+
+    workers = min(workers, len(chunks), os.cpu_count() or 1)
+    if workers <= 1:
+        return None
+    method = "fork" if (
+        "fork" in multiprocessing.get_all_start_methods()
+        and "jax" not in sys.modules) else "spawn"
+    try:
+        mp_ctx = multiprocessing.get_context(method)
+        if method == "fork":
+            spans, off = [], 0
+            for c in chunks:
+                spans.append((off, off + len(c)))
+                off += len(c)
+            with _FORK_MERGE_LOCK:
+                _FORK_MERGE_STATE = [s for c in chunks for s in c]
+                try:
+                    with ProcessPoolExecutor(max_workers=workers,
+                                             mp_context=mp_ctx) as ex:
+                        return list(ex.map(_merge_span, spans))
+                finally:
+                    _FORK_MERGE_STATE = None
+        else:
+            ex = ProcessPoolExecutor(max_workers=workers, mp_context=mp_ctx)
+            try:
+                ex.submit(int).result(timeout=_SPAWN_PROBE_TIMEOUT_S)
+                results = list(ex.map(_merge_job, chunks))
+                ex.shutdown()
+                return results
+            except Exception:
+                ex.shutdown(wait=False, cancel_futures=True)
+                raise OSError("spawn pool unusable")
+    except (BrokenProcessPool, pickle.PicklingError, ImportError, OSError):
+        return None
 
 
 # --------------------------------------------------------------------------

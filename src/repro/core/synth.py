@@ -494,3 +494,28 @@ def write_hlo_dump(root: str, n_files: int = 3, sites_per_file: int = 200,
             f.write(text)
         paths.append(path)
     return paths
+
+
+def write_fleet_dump(root: str, n_hosts: int = 4, steps: int = 1,
+                     sites_per_file: int = 120, seed: int = 0) -> List[str]:
+    """Materialize a fleet-shaped dump: one module per host x step.
+
+    Files follow the warehouse naming convention the query layer parses
+    (`session.label_meta`): `host{h:03d}_step{s:03d}.txt`, each a
+    distinct-seed `synthetic_hlo` module written atomically.  This is
+    the input shape of the CI warehouse gate — synthesize N hosts,
+    tree-merge, query/diff a slice.  Returns the paths written, hosts
+    outer, steps inner.
+    """
+    from repro.core.persist import atomic_open
+    os.makedirs(root, exist_ok=True)
+    paths = []
+    for h in range(n_hosts):
+        for s in range(steps):
+            text = synthetic_hlo(n_sites=sites_per_file,
+                                 seed=seed + h * steps + s)
+            path = os.path.join(root, f"host{h:03d}_step{s:03d}.txt")
+            with atomic_open(path, "w") as f:
+                f.write(text)
+            paths.append(path)
+    return paths

@@ -428,10 +428,13 @@ class WatchDaemon:
         one JSON side blob (`"watch"`) holding trace metadata, the
         watcher's ingested-signature map, cached lint findings, the
         quarantine and the provenance records.  Written through
-        `persist.atomic_open`, so a daemon killed mid-write leaves the
-        previous complete checkpoint behind.
+        `persist.atomic_open` via the deterministic parallel npz writer
+        (`persist.write_npz`), so a daemon killed mid-write leaves the
+        previous complete checkpoint behind and per-poll re-saves of an
+        unchanged state produce byte-identical files.
         """
         import numpy as np
+        from repro.core.persist import write_npz
         from repro.core.session import _trace_meta
         paths = sorted(self._traces)
         arrs: Dict[str, object] = {}
@@ -452,7 +455,7 @@ class WatchDaemon:
             "rounds": self.rounds,
         }))
         with atomic_open(path, "wb") as f:
-            np.savez_compressed(f, **arrs)
+            write_npz(f, arrs)
         self._dirty = False
         return path
 

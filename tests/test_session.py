@@ -286,7 +286,8 @@ def test_session_save_failure_preserves_previous_save(tmp_path, ext,
         monkeypatch.setattr(json, "dump",
                             lambda *a, **k: (_ for _ in ()).throw(boom))
     else:
-        monkeypatch.setattr(np, "savez_compressed",
+        import repro.core.session as session_mod
+        monkeypatch.setattr(session_mod, "write_npz",
                             lambda *a, **k: (_ for _ in ()).throw(boom))
     with pytest.raises(RuntimeError):
         TraceSession("new", [rand_trace(1, 40)]).save(path)

@@ -1,0 +1,317 @@
+"""Trace-warehouse layer: tree-reduction merge, deterministic npz,
+memory-mapped load, and the `session query` slice CLI.
+
+The invariants pinned here are the ones the fleet workflow leans on:
+
+  * `TraceStore.merge_tree` is `identical` to the flat `merge` for any
+    tree shape (associativity of first-seen interning) — property-tested
+    over arity/count via the hypothesis shim.
+  * `save` is byte-deterministic: saving the same session twice yields
+    byte-equal files (the npz writer pins zip member metadata instead of
+    inheriting `savez_compressed`'s wall-clock timestamps).
+  * `load(mmap=True)` is read-only + copy-on-write: columns adopt
+    read-only maps, mutation copies, the file bytes never change, and
+    query/diff output is byte-identical to an eager load.
+  * `session query` follows the detect/lint CLI contract: exit 0 on
+    success (an empty slice is a valid empty answer), 2 on input errors.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, strategies as st
+
+from repro.core.persist import open_npz_mmap, write_npz
+from repro.core.session import TraceSession, label_meta, parse_slice
+from repro.core.store import LazyNames, TraceStore, pack_names
+from repro.core.synth import synthetic_trace, write_fleet_dump
+from repro.core.topology import MeshSpec
+
+MESH = MeshSpec((2, 4), ("data", "model"))
+
+
+def host_trace(h: int, step: int = 0, n: int = 80):
+    return synthetic_trace(f"host{h:03d}_step{step:03d}", MESH,
+                           n_sites=n, seed=h * 7 + step)
+
+
+def fleet_session(n_hosts: int = 4, steps: int = 1, n: int = 80):
+    return TraceSession("fleet", [host_trace(h, s, n)
+                                  for h in range(n_hosts)
+                                  for s in range(steps)])
+
+
+# -- tree-reduction merge ----------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(min_value=1, max_value=13),
+       arity=st.integers(min_value=2, max_value=5))
+def test_merge_tree_identical_to_flat_merge(n, arity):
+    stores = [host_trace(h, n=30).store for h in range(n)]
+    flat = TraceStore.merge(stores)
+    tree = TraceStore.merge_tree(stores, arity=arity)
+    assert tree.identical(flat)
+    # ... and through the process pool (falls back to serial when the
+    # box can't fork/spawn — same result either way)
+    pooled = TraceStore.merge_tree(stores, arity=arity, workers=2)
+    assert pooled.identical(flat)
+
+
+def test_merge_tree_matches_any_manual_bracketing():
+    stores = [host_trace(h, n=25).store for h in range(6)]
+    flat = TraceStore.merge(stores)
+    # a deliberately lopsided shape: ((0,1),2,((3,4),5))
+    left = TraceStore.merge([TraceStore.merge(stores[:2]), stores[2]])
+    right = TraceStore.merge([TraceStore.merge(stores[3:5]), stores[5]])
+    assert TraceStore.merge([left, right]).identical(flat)
+    # the serial left fold is a bracketing too
+    acc = stores[0]
+    for s in stores[1:]:
+        acc = TraceStore.merge([acc, s])
+    assert acc.identical(flat)
+
+
+def test_merge_tree_edges():
+    with pytest.raises(ValueError):
+        TraceStore.merge_tree([TraceStore.empty()], arity=1)
+    assert TraceStore.merge_tree([]).n == 0
+    solo = host_trace(0, n=20).store
+    # single input passes through (the zero-copy slice-merge fast path)
+    assert TraceStore.merge_tree([solo]) is solo
+
+
+# -- deterministic persistence ----------------------------------------------
+
+@pytest.mark.parametrize("ext", ["npz", "json"])
+def test_save_twice_is_byte_identical(tmp_path, ext):
+    sess = fleet_session(n_hosts=2, n=60)
+    p1 = sess.save(str(tmp_path / f"a.{ext}"))
+    p2 = sess.save(str(tmp_path / f"b.{ext}"))
+    with open(p1, "rb") as f1, open(p2, "rb") as f2:
+        assert f1.read() == f2.read()
+
+
+def test_write_npz_is_np_load_compatible(tmp_path):
+    arrs = {
+        "floats": np.linspace(0.0, 1.0, 17),
+        "codes": np.arange(5, dtype=np.int32),
+        "empty": np.zeros(0, dtype=np.int64),
+        "fortran": np.asfortranarray(np.arange(6.0).reshape(2, 3)),
+        "meta": np.array(json.dumps({"n": 17})),
+    }
+    for compress in (True, False):
+        path = str(tmp_path / f"c{compress}.npz")
+        with open(path, "wb") as f:
+            write_npz(f, arrs, compress=compress, workers=4)
+        with np.load(path) as loaded:
+            assert sorted(loaded.files) == sorted(arrs)
+            for k, v in arrs.items():
+                got = loaded[k]
+                assert got.shape == np.asarray(v).shape
+                assert np.array_equal(got, v)
+
+
+# -- mmap load: read-only, copy-on-write, byte-identical answers -------------
+
+def test_mmap_load_is_zero_copy_and_cow(tmp_path):
+    sess = fleet_session(n_hosts=3, n=70)
+    path = sess.save(str(tmp_path / "fleet.npz"), compress=False)
+    before = open(path, "rb").read()
+
+    lazy = TraceSession.load(path, mmap=True)
+    eager = TraceSession.load(path)
+    store = lazy.get(lazy.labels()[0]).store
+    # columns adopt read-only zero-copy views of the file's maps
+    # (`np.asarray` drops the memmap subclass but not the mapping) —
+    # writing through must be impossible
+    col = store.operand_bytes
+    assert not col.flags.writeable and not col.flags.owndata
+    assert isinstance(col.base, np.memmap) or isinstance(
+        getattr(col.base, "base", None), np.memmap)
+    with pytest.raises((ValueError, RuntimeError)):
+        store.operand_bytes[0] = 1.0
+
+    # a mapped session answers byte-identically to an eager one
+    q_lazy = json.dumps(lazy.query(host="00*"), sort_keys=True)
+    q_eager = json.dumps(eager.query(host="00*"), sort_keys=True)
+    assert q_lazy == q_eager
+    d_lazy = lazy.diff("host=001", "host=002", as_json=True)
+    d_eager = eager.diff("host=001", "host=002", as_json=True)
+    assert d_lazy == d_eager
+
+    # mutation copies: append grows a private buffer, never the file
+    extra = host_trace(9, n=15).store
+    n0 = store.n
+    store.append(extra)
+    assert store.n == n0 + extra.n
+    assert open(path, "rb").read() == before
+
+
+def test_mmap_rejects_compressed_and_json(tmp_path):
+    sess = fleet_session(n_hosts=2, n=40)
+    zp = sess.save(str(tmp_path / "fleet.npz"))       # compressed default
+    with pytest.raises(ValueError, match="no-compress"):
+        TraceSession.load(zp, mmap=True)
+    jp = sess.save(str(tmp_path / "fleet.json"))
+    with pytest.raises(ValueError, match="uncompressed"):
+        TraceSession.load(jp, mmap=True)
+
+
+# -- packed names ------------------------------------------------------------
+
+def test_lazy_names_semantics():
+    names = ["ar.1", "", "rs.2", "ag.3"]
+    lazy = LazyNames(pack_names(names), len(names))
+    assert len(lazy) == 4 and list(lazy) == names
+    assert lazy[2] == "rs.2"
+    assert lazy == names and names == list(lazy)
+    assert LazyNames(pack_names([]), 0) == []
+    assert LazyNames(pack_names([""]), 1) == [""]
+    with pytest.raises(ValueError):
+        LazyNames(pack_names(["a", "b"]), 3)._materialize()
+
+
+def test_pre_warehouse_sidecar_names_still_load():
+    store = host_trace(0, n=30).store
+    arrs = store.npz_arrays()
+    # rewrite the archive the way pre-warehouse sessions stored names:
+    # in the JSON side-car, with no packed member
+    side = json.loads(str(arrs.pop("meta")))
+    side["names"] = list(store.names)
+    del arrs["names"]
+    arrs["meta"] = np.array(json.dumps(side))
+    assert TraceStore.from_npz_arrays(arrs).identical(store)
+
+
+# -- slice specs and the query layer -----------------------------------------
+
+def test_label_meta_and_parse_slice():
+    assert label_meta("host012_step003") == {"host": "012", "step": 3}
+    assert label_meta("run5-host7") == {"host": "7"}
+    assert label_meta("dp8-baseline") == {}
+    assert parse_slice("host=00*,step=1") == {"host": "00*", "step": "1"}
+    for bad in ("host=1,port=2", "justaword", "op="):
+        with pytest.raises(ValueError):
+            parse_slice(bad)
+
+
+def test_select_rows_match_per_event_reference():
+    sess = fleet_session(n_hosts=3, steps=2, n=90)
+    sel = sess.select(host="00[01]", step="1", kind="all-reduce*")
+    assert sel.labels() == ["host000_step001", "host001_step001"]
+    for label in sel.labels():
+        ref = sess.get(label)
+        want = [e for e in ref.events if e.kind.startswith("all-reduce")]
+        got = sel.get(label)
+        assert got.store.n == len(want)
+        kinds = got.store.kind
+        assert all(kinds.vocab[c].startswith("all-reduce")
+                   for c in np.asarray(kinds.codes))
+    # unfiltered traces are shared, not copied
+    assert sess.select(host="*").get("host000_step000").store \
+        is sess.get("host000_step000").store
+
+
+def test_query_totals_match_merged_trace():
+    sess = fleet_session(n_hosts=4, n=60)
+    payload = sess.query(host="00*", by="kind_link")
+    assert payload["traces"] == [f"host{h:03d}_step000" for h in range(4)]
+    merged = sess.merged()
+    assert payload["sites"] == merged.store.n
+    assert payload["totals"]["bytes"] == pytest.approx(
+        float(np.sum(merged.store.operand_bytes
+                     * merged.store.multiplicity)))
+    assert payload["totals"]["time_s"] == pytest.approx(
+        merged.total_est_time_s())
+    # empty slice: a valid, empty answer — not an error
+    empty = sess.query(host="zzz*")
+    assert empty["traces"] == [] and empty["sites"] == 0
+    assert empty["totals"]["bytes"] == 0.0
+
+
+def test_fleet_diff_slice_equals_manual_merge():
+    sess = fleet_session(n_hosts=4, steps=2, n=70)
+    out = json.loads(sess.diff("host=00[01]", "host=00[23]", as_json=True))
+    a = TraceSession("a", [sess.get(f"host{h:03d}_step{s:03d}")
+                           for h in (0, 1) for s in (0, 1)]).merged()
+    b = TraceSession("b", [sess.get(f"host{h:03d}_step{s:03d}")
+                           for h in (2, 3) for s in (0, 1)]).merged()
+    from repro.core.diff import diff_json
+    ref = diff_json(a, b)
+    assert out["rows"] == ref["rows"]
+    assert out["slice"] == {"a": {"spec": "host=00[01]", "traces": 4},
+                            "b": {"spec": "host=00[23]", "traces": 4}}
+
+
+# -- CLI: exit codes and schema ----------------------------------------------
+
+@pytest.fixture()
+def fleet_npz(tmp_path):
+    from repro.core.session import _main
+    dump = write_fleet_dump(str(tmp_path / "dump"), n_hosts=3, steps=1,
+                            sites_per_file=30, seed=0)
+    out = str(tmp_path / "fleet.npz")
+    assert _main(["ingest", out, *dump, "--mesh", "2,4",
+                  "--axes", "data,model", "--no-compress"]) == 0
+    return out
+
+
+def test_query_cli_json_schema_and_exit_codes(fleet_npz, tmp_path, capsys):
+    from repro.core.session import _main
+    assert _main(["query", fleet_npz, "--host", "00*", "--json",
+                  "--mmap"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert set(payload) >= {"session", "slice", "traces", "sites",
+                            "totals", "rollup"}
+    assert payload["slice"]["host"] == "00*"
+    assert payload["rollup"]["by"] == "kind_link"
+    assert payload["ingest"]["records"] == 3
+    assert payload["ingest"]["degraded"] == 0
+
+    # text mode renders the same slice
+    assert _main(["query", fleet_npz, "--host", "00*"]) == 0
+    txt = capsys.readouterr().out
+    assert "slice host=00*" in txt and "3 trace(s)" in txt
+
+    # empty slice: exit 0 (a valid empty answer, like detect on a clean
+    # trace); bad path and compressed-with---mmap: exit 2
+    assert _main(["query", fleet_npz, "--host", "zzz*", "--json"]) == 0
+    assert json.loads(capsys.readouterr().out)["traces"] == []
+    assert _main(["query", str(tmp_path / "nope.npz"), "--json"]) == 2
+    compressed = str(tmp_path / "c.npz")
+    TraceSession.load(fleet_npz).save(compressed)
+    assert _main(["query", compressed, "--mmap"]) == 2
+    assert "no-compress" in capsys.readouterr().err
+
+
+def test_query_and_diff_cli_identical_eager_vs_mmap(fleet_npz, capsys):
+    from repro.core.session import _main
+    outs = {}
+    for flag in ([], ["--mmap"]):
+        assert _main(["query", fleet_npz, "--kind", "all-*", "--json",
+                      *flag]) == 0
+        q = capsys.readouterr().out
+        assert _main(["diff", fleet_npz, "host=000", "host=001",
+                      "--json", *flag]) == 0
+        outs["mmap" if flag else "eager"] = (q, capsys.readouterr().out)
+    assert outs["eager"] == outs["mmap"]
+
+
+def test_report_accepts_slice_spec(fleet_npz, capsys):
+    from repro.core.session import _main
+    assert _main(["report", fleet_npz, "host=00*", "--format", "json"]) == 0
+    payload = json.loads(capsys.readouterr().out)
+    assert payload["label"] == "host=00*"
+    assert _main(["report", fleet_npz, "host=zzz"]) == 2
+    assert "matches no traces" in capsys.readouterr().err
+
+
+def test_ingest_records_carry_host_and_step(fleet_npz):
+    sess = TraceSession.load(fleet_npz)
+    recs = sess.ingest_report.records
+    assert [(r.host, r.step) for r in recs] == \
+        [(f"{h:03d}", 0) for h in range(3)]
+    rt = [type(recs[0]).from_dict(r.to_dict()) for r in recs]
+    assert [(r.host, r.step) for r in rt] == [(r.host, r.step)
+                                              for r in recs]
